@@ -1,0 +1,66 @@
+"""Kernel microbench: wall time of the pure-jnp oracle vs the Pallas kernel
+in interpret mode (CPU container — interpret mode measures CORRECTNESS cost,
+not TPU speed), plus the derived HBM-traffic model ratio that motivates the
+fusion (DESIGN.md §7)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gossip_mix_update, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+
+from .common import write_table
+
+
+def timeit(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    rows = []
+
+    T, K = 4096, 2
+    w = jax.random.normal(ks[0], (T, 128))
+    nb = jax.random.normal(ks[1], (K, T, 128))
+    g = jax.random.normal(ks[2], (T, 128))
+    mu = jax.random.normal(ks[3], (T, 128))
+    coefs = jnp.array([0.5, 0.25, 0.25])
+    us_ref = timeit(lambda *a: ref.gossip_mix_update_ref(
+        *a, lr=0.1, beta=0.9)[0], w, nb, g, mu, coefs)
+    us_int = timeit(lambda *a: gossip_mix_update(
+        *a, lr=0.1, beta=0.9, interpret=True)[0], w, nb, g, mu, coefs)
+    # HBM traffic model: unfused 3 passes (mix, momentum, apply) vs fused 1
+    unfused = (1 + K + 1) * 4 + (1 + 1) * 4 + (2 + 1) * 4   # per elem bytes
+    fused = (1 + K + 1 + 1) * 4 + 2 * 4
+    rows.append(["gossip_mix", us_ref, us_int, unfused / fused])
+
+    S, hd = 512, 64
+    q = jax.random.normal(ks[0], (1, 4, S, hd))
+    k = jax.random.normal(ks[1], (1, 2, S, hd))
+    v = jax.random.normal(ks[2], (1, 2, S, hd))
+    us_ref2 = timeit(lambda *a: ref.flash_attention_ref(*a, causal=True),
+                     q, k, v)
+    us_int2 = timeit(lambda *a: flash_attention_fwd(
+        *a, causal=True, block_q=128, block_k=128, interpret=True), q, k, v)
+    # derived: causal tile skipping -> ~2x fewer score flops + no S^2 matrix
+    rows.append(["flash_attention", us_ref2, us_int2, 2.0])
+
+    write_table("bench_kernels",
+                ["kernel", "ref_us", "interpret_us", "derived_traffic_ratio"],
+                rows)
+    for name, us_ref_, us_int_, ratio in rows:
+        print(f"bench_kernel_{name},{us_ref_:.0f},"
+              f"traffic_ratio={ratio:.2f} interpret_us={us_int_:.0f}")
+
+
+if __name__ == "__main__":
+    main()

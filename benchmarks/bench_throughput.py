@@ -1,0 +1,32 @@
+"""App. F end-to-end runtime: measured CPU step time of the research trainer
+(SSGD vs DPSGD) plus the derived production collective volume per step from
+the roofline model for each gossip backend."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.launch.analytic import gossip_link_bytes_per_chip
+
+from .common import train_fc, write_table
+
+
+def main():
+    rows = []
+    us = {}
+    for algo in ("ssgd", "dpsgd"):
+        r = train_fc(algo, 0.25, steps=40)
+        us[algo] = r["us_per_step"]
+        rows.append([algo, r["us_per_step"]])
+    cfg = get_config("yi-34b")
+    eins = gossip_link_bytes_per_chip(cfg, 256, 16, "einsum")
+    pp = gossip_link_bytes_per_chip(cfg, 256, 16, "ppermute")
+    rows.append(["yi34b_gossip_einsum_GB", eins / 1e9])
+    rows.append(["yi34b_gossip_ppermute_GB", pp / 1e9])
+    write_table("bench_throughput", ["metric", "value"], rows)
+    derived = (f"dpsgd/ssgd step ratio={us['dpsgd'] / us['ssgd']:.2f}; "
+               f"gossip einsum={eins / 1e9:.1f}GB ppermute={pp / 1e9:.1f}GB "
+               f"per chip (paper AppF: DPSGD cheaper comms)")
+    print(f"bench_throughput,{us['dpsgd']:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Shared harness for the paper-table benchmarks (CPU scale).
+
+Every benchmark prints CSV rows `name,us_per_call,derived` (run.py contract)
+and writes its full table to results/bench/<name>.csv.
+"""
+from __future__ import annotations
+
+import csv
+import math
+import os
+import time
+
+import jax
+
+from repro.core import AlgoConfig, MultiLearnerTrainer
+from repro.data import ShardedLoader, TemplateImages
+from repro.models import fcnet
+from repro.optim import sgd
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def write_table(name: str, header, rows):
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def train_fc(algo: str, lr: float, *, n: int = 5, local_batch: int = 400,
+             steps: int = 150, seed: int = 0, noise_std: float = 0.01,
+             topology: str = "random_pair", diag_every: int = 0,
+             dataset=None, optimizer=None):
+    """Returns dict(losses, diags, us_per_step, trainer, state, loader)."""
+    ds = dataset or TemplateImages()
+    loader = ShardedLoader(ds, n_learners=n, local_batch=local_batch,
+                           seed=seed)
+    key = jax.random.PRNGKey(seed)
+    params = fcnet.init_params(key, in_dim=784, hidden=50)
+    tr = MultiLearnerTrainer(
+        fcnet.loss_fn, optimizer or sgd(lr),
+        AlgoConfig(algo=algo, topology=topology, n_learners=n,
+                   noise_std=noise_std),
+        alpha_for_diag=lr)
+    st = tr.init(key, params)
+    losses, diags = [], []
+    # warm-up/compile step excluded from timing
+    st, m = tr.train_step(st, loader.batch(0))
+    t0 = time.perf_counter()
+    for i in range(1, steps):
+        st, m = tr.train_step(st, loader.batch(i))
+        losses.append(float(m.loss))
+        if diag_every and i % diag_every == 0:
+            d = tr.diagnostics(st, loader.batch(50_000 + i))
+            diags.append((i, d))
+    dt = (time.perf_counter() - t0) / max(steps - 1, 1)
+    return {"losses": losses, "diags": diags, "us_per_step": dt * 1e6,
+            "trainer": tr, "state": st, "loader": loader}
+
+
+def final_loss(losses, k: int = 10) -> float:
+    tail = [x for x in losses[-k:] if math.isfinite(x)]
+    return sum(tail) / len(tail) if tail else float("nan")
+
+
+def fmt(x) -> str:
+    if isinstance(x, float):
+        return f"{x:.6g}"
+    return str(x)

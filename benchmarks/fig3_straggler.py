@@ -1,0 +1,56 @@
+"""Paper Fig. 3 + App. F: straggler immunity / runtime model.
+
+TPU SPMD is bulk-synchronous, so the paper's *asynchrony* benefit does not
+transfer (DESIGN.md §2); what remains is the communication-volume benefit.
+This benchmark computes per-step wall-clock from the roofline comm model for
+SSGD (all-reduce of grads) vs DPSGD-einsum vs DPSGD-ppermute under a k-times
+straggling link, for the paper's SWB-300-like 165 MB model and for yi-34b."""
+from __future__ import annotations
+
+import time
+
+from repro.configs import get_config
+from repro.launch.roofline import ICI_BW
+
+from .common import write_table
+
+STRAGGLE = (1.0, 2.0, 5.0)
+
+
+def step_time(p_bytes: float, n_learners: int, algo: str, slow: float):
+    if algo == "ssgd":            # ring all-reduce: 2P(n-1)/n, sync on all
+        vol = 2 * p_bytes * (n_learners - 1) / n_learners
+        return vol / (ICI_BW / slow)
+    if algo == "dpsgd_einsum":    # all-gather every replica
+        vol = n_learners * p_bytes
+        return vol / (ICI_BW / slow)
+    # ppermute ring: exchange with 2 neighbors only; a slow link delays only
+    # its pair, amortized 1/n of steps at full slowdown
+    vol = 2 * p_bytes
+    eff = 1.0 + (slow - 1.0) / n_learners
+    return vol / ICI_BW * eff
+
+
+def main():
+    t0 = time.perf_counter()
+    rows = []
+    models = {"swb300_lstm_165MB": 165e6,
+              "yi-34b": get_config("yi-34b").n_params() * 2 / 16}  # per shard
+    for name, p in models.items():
+        for slow in STRAGGLE:
+            for algo in ("ssgd", "dpsgd_einsum", "dpsgd_ppermute"):
+                rows.append([name, slow, algo,
+                             step_time(p, 16, algo, slow) * 1e3])
+    write_table("fig3_straggler", ["model", "straggle_x", "algo",
+                                   "comm_ms_per_step"], rows)
+    us = (time.perf_counter() - t0) * 1e6
+    s5 = {r[2]: r[3] for r in rows if r[0] == "swb300_lstm_165MB"
+          and r[1] == 5.0}
+    derived = (f"5x-straggler comm ms: ssgd={s5['ssgd']:.1f} "
+               f"dpsgd_ppermute={s5['dpsgd_ppermute']:.1f} "
+               f"(paper Fig3: DPSGD immune)")
+    print(f"fig3_straggler,{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Aggregates results/dryrun/*.json into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import write_table
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load(mesh="pod_16x16", algo="dpsgd", backend="einsum", tag=None):
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        if r.get("algo") != algo or r.get("backend") != backend:
+            continue
+        parts = os.path.basename(f)[:-5].split("__")
+        has_tag = len(parts) > 5
+        if (tag is None) == has_tag or (tag and tag not in parts):
+            continue
+        out.append(r)
+    return out
+
+
+def main():
+    recs = load()
+    rows = []
+    for r in recs:
+        rl = r["roofline"]
+        rows.append([
+            r["arch"], r["shape"], rl["bottleneck"],
+            f"{rl['t_compute_s']:.4g}", f"{rl['t_memory_s']:.4g}",
+            f"{rl['t_collective_s']:.4g}",
+            f"{r['useful_flops_ratio']:.3f}",
+            f"{r['memory']['total_hbm_bytes'] / 1e9:.1f}",
+        ])
+    write_table("roofline_single_pod",
+                ["arch", "shape", "bottleneck", "t_compute_s", "t_memory_s",
+                 "t_collective_s", "useful_flops_ratio", "hbm_GB_per_chip"],
+                rows)
+    n_coll = sum(1 for r in rows if r[2] == "collective")
+    print(f"roofline_report,0,{len(rows)} baselines aggregated; "
+          f"{n_coll} collective-bound")
+
+
+if __name__ == "__main__":
+    main()

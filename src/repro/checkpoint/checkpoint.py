@@ -1,0 +1,66 @@
+"""Flat-npz pytree checkpointing with atomic writes and step indexing.
+
+Layout:  <dir>/ckpt_<step>.npz   keys are '/'-joined pytree paths.
+Restore requires a template pytree (for structure + dtypes) — standard for
+pure-JAX frameworks; the trainer's init() provides it.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    arrays = _flatten(tree)
+    path = os.path.join(directory, f"ckpt_{step}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)  # atomic on POSIX
+    return path
+
+
+def latest_step(directory: str):
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.fullmatch(r"ckpt_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, template, step: int | None = None):
+    """Returns (tree, step); raises FileNotFoundError if nothing saved."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"ckpt_{step}.npz")
+    with np.load(path) as data:
+        flat = _flatten(template)
+        missing = set(flat) - set(data.files)
+        if missing:
+            raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]}...")
+        loaded = {k: data[k] for k in flat}
+    leaves_tpl, treedef = jax.tree_util.tree_flatten_with_path(template)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                     for p in path_) for path_, _ in leaves_tpl]
+    new_leaves = [jax.numpy.asarray(loaded[k], leaf.dtype)
+                  for k, (_, leaf) in zip(keys, leaves_tpl)]
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), new_leaves)
+    return tree, step

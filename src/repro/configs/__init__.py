@@ -1,0 +1,42 @@
+"""Config registry: --arch <id> resolves here."""
+from .base import ModelConfig
+from .mistral_large_123b import CONFIG as MISTRAL_LARGE_123B
+from .seamless_m4t_large_v2 import CONFIG as SEAMLESS_M4T_LARGE_V2
+from .gemma2_27b import CONFIG as GEMMA2_27B
+from .granite_20b import CONFIG as GRANITE_20B
+from .qwen3_moe_235b_a22b import CONFIG as QWEN3_MOE_235B_A22B
+from .xlstm_350m import CONFIG as XLSTM_350M
+from .yi_34b import CONFIG as YI_34B
+from .granite_moe_3b_a800m import CONFIG as GRANITE_MOE_3B_A800M
+from .qwen2_vl_7b import CONFIG as QWEN2_VL_7B
+from .jamba_v01_52b import CONFIG as JAMBA_V01_52B
+from .transformer_100m import CONFIG as TRANSFORMER_100M
+
+REGISTRY = {c.name: c for c in [
+    MISTRAL_LARGE_123B, SEAMLESS_M4T_LARGE_V2, GEMMA2_27B, GRANITE_20B,
+    QWEN3_MOE_235B_A22B, XLSTM_350M, YI_34B, GRANITE_MOE_3B_A800M,
+    QWEN2_VL_7B, JAMBA_V01_52B, TRANSFORMER_100M,
+]}
+
+ASSIGNED = [c.name for c in [
+    MISTRAL_LARGE_123B, SEAMLESS_M4T_LARGE_V2, GEMMA2_27B, GRANITE_20B,
+    QWEN3_MOE_235B_A22B, XLSTM_350M, YI_34B, GRANITE_MOE_3B_A800M,
+    QWEN2_VL_7B, JAMBA_V01_52B,
+]]
+
+# assigned input shapes: (seq_len, global_batch, kind)
+SHAPES = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch '{name}'; available: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+__all__ = ["ModelConfig", "REGISTRY", "ASSIGNED", "SHAPES", "get_config"]

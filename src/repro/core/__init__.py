@@ -1,0 +1,19 @@
+"""Core: the paper's contribution — decentralized multi-learner SGD with
+landscape-dependent self-adjusting effective learning rate."""
+from .dpsgd import AlgoConfig, mix_einsum, mix_ppermute_ring, mix_ppermute_pair
+from .topology import (full_matrix, ring_matrix, torus_matrix,
+                       random_pair_matrix, hierarchical_matrix,
+                       is_doubly_stochastic, spectral_gap, make_mixing_fn)
+from .trainer import MultiLearnerTrainer, TrainState, StepMetrics
+from .diagnostics import DiagStats, compute_diagnostics
+from .smoothing import smoothed_loss, estimate_smoothness
+from .util import learner_mean, learner_var
+
+__all__ = [
+    "AlgoConfig", "mix_einsum", "mix_ppermute_ring", "mix_ppermute_pair",
+    "full_matrix", "ring_matrix", "torus_matrix", "random_pair_matrix",
+    "hierarchical_matrix", "is_doubly_stochastic", "spectral_gap",
+    "make_mixing_fn", "MultiLearnerTrainer", "TrainState", "StepMetrics",
+    "DiagStats", "compute_diagnostics", "smoothed_loss", "estimate_smoothness",
+    "learner_mean", "learner_var",
+]

@@ -1,0 +1,91 @@
+"""The paper's analysis instruments (Sec. 2 + Appendix B).
+
+Definitions (all on the flattened parameter space):
+
+  w_a        = (1/n) sum_j w_j                      average weight
+  g          = grad L(w_a)  over the SUPERBATCH mu  "true" direction
+  g_j        = grad L^{mu_j}(w_j or w_a)            per-learner gradient
+  g_a        = (1/n) sum_j g_j
+  alpha_e    = alpha * (g_a . g) / ||g||^2          effective learning rate (Eq. 4)
+  eta_perp   = -alpha g_a + alpha_e g               orthogonal noise
+  Delta      = ||eta_perp||^2                       noise strength
+  Delta_S    = alpha^2 (||g0||^2 - (g0.g)^2/||g||^2)   SSGD noise (App. B)
+  Delta2     = alpha^2 ||(1/n) sum_j [grad L^{mu_j}(w_j) - grad L^{mu_j}(w_a)]||^2
+  sigma_w^2  = Tr(C) = sum_l (1/n) sum_j (w_jl - w_al)^2   weight variance
+
+These are *optional* (diag_every) because they require an extra
+forward/backward at w_a over the superbatch.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .util import (learner_mean, learner_var, tree_dot, tree_norm_sq, tree_sub,
+                   tree_scale)
+
+
+class DiagStats(NamedTuple):
+    alpha_e: jnp.ndarray        # effective learning rate (Eq. 4)
+    sigma_w_sq: jnp.ndarray     # weight variance Tr(C)
+    delta_total: jnp.ndarray    # ||eta_perp||^2
+    delta_s: jnp.ndarray        # SSGD (minibatch) noise component
+    delta_2: jnp.ndarray        # landscape-dependent DPSGD component (Eq. 5)
+    grad_norm: jnp.ndarray      # ||g|| at w_a over superbatch
+    ga_norm: jnp.ndarray        # ||g_a||
+    loss_at_mean: jnp.ndarray
+
+
+def compute_diagnostics(loss_fn: Callable, stacked_params, stacked_batch,
+                        alpha) -> DiagStats:
+    """loss_fn(params, batch) -> scalar loss for ONE learner's minibatch.
+
+    stacked_params: leaves (n, ...); stacked_batch: leaves (n, B, ...).
+    """
+    w_a = learner_mean(stacked_params)
+
+    # g_j at local weights w_j (DPSGD gradients)
+    g_local = jax.vmap(jax.grad(loss_fn))(stacked_params, stacked_batch)
+    g_a = learner_mean(g_local)
+
+    # g_j at the mean weights (SSGD gradients) and superbatch gradient g0=g
+    loss_mean_vals, g_at_mean = jax.vmap(
+        jax.value_and_grad(loss_fn), in_axes=(None, 0))(w_a, stacked_batch)
+    g0 = learner_mean(g_at_mean)          # superbatch gradient at w_a
+    g = g0                                 # direction of the full-batch gradient
+
+    g_norm_sq = tree_norm_sq(g)
+    safe = jnp.maximum(g_norm_sq, 1e-30)
+    alpha = jnp.asarray(alpha, jnp.float32)
+
+    alpha_e = alpha * tree_dot(g_a, g) / safe
+
+    # eta_perp = -alpha g_a + alpha_e g ; Delta = ||eta_perp||^2
+    eta = tree_sub(tree_scale(alpha_e, g), tree_scale(alpha, g_a))
+    delta_total = tree_norm_sq(eta)
+
+    # Delta_S = alpha^2 (||g0||^2 - (g0.g)^2 / ||g||^2)  -> 0 here because
+    # g == g0 by construction (superbatch == union of minibatches); the
+    # fluctuation version uses per-minibatch deviation:
+    dev = jax.tree_util.tree_map(lambda gj, gm: gj - gm[None], g_at_mean,
+                                 jax.tree_util.tree_map(lambda x: x, g0))
+    # mean over learners of ||g_j(w_a) - g0||^2 / n  (batch-noise strength)
+    per = jax.vmap(tree_norm_sq)(dev)
+    delta_s = alpha ** 2 * jnp.mean(per) / per.shape[0]
+
+    # Delta^(2): gradients moved by the weight spread (Eq. 5 numerator)
+    diff = tree_sub(g_a, learner_mean(g_at_mean))
+    delta_2 = alpha ** 2 * tree_norm_sq(diff)
+
+    return DiagStats(
+        alpha_e=alpha_e,
+        sigma_w_sq=learner_var(stacked_params),
+        delta_total=delta_total,
+        delta_s=delta_s,
+        delta_2=delta_2,
+        grad_norm=jnp.sqrt(g_norm_sq),
+        ga_norm=jnp.sqrt(tree_norm_sq(g_a)),
+        loss_at_mean=jnp.mean(loss_mean_vals),
+    )

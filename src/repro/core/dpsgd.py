@@ -1,0 +1,124 @@
+"""Multi-learner update rules: SSGD, SSGD* and DPSGD (the paper's Eq. 1/2).
+
+All functions operate on *stacked* pytrees whose leaves carry a leading
+learner axis of size n.  Two interchangeable gossip backends:
+
+  * ``mix_einsum``   — w_i <- sum_j M_ij w_j, the paper-faithful reference.
+    Under pjit the L x L einsum over the learner axis partitions into
+    all-gather + local contraction.
+  * ``mix_ppermute`` — ring / pairwise gossip via jax.lax.ppermute inside
+    shard_map.  Moves O(P) bytes per learner instead of O(L*P): this is the
+    TPU-native collective schedule (beyond-paper optimization, see DESIGN §2).
+
+The semantics of one DPSGD step (paper Eq. 2, "mix then descend"):
+
+    g_j   = grad L^{mu_j}(w_j)            # gradient at the LOCAL weights
+    w_s,j = sum_k M_jk w_k                # gossip average of neighbors
+    w_j   <- w_s,j - alpha * g_j
+
+SSGD (Eq. 1): g_j = grad L^{mu_j}(w_a); w_a <- w_a - alpha * mean_j g_j.
+SSGD* adds iid N(0, sigma0^2) weight noise before the gradient evaluation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import topology as topo
+from .util import tree_gaussian_like, learner_mean
+
+__all__ = ["AlgoConfig", "mix_einsum", "mix_ppermute_ring", "mix_ppermute_pair",
+           "perturb_weights"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoConfig:
+    """How the learners talk to each other."""
+    algo: str = "dpsgd"            # dpsgd | ssgd | ssgd_star
+    topology: str = "random_pair"  # full | ring | torus | random_pair | solo
+    gossip_backend: str = "einsum"  # einsum | ppermute
+    gossip_order: str = "mix_then_descend"  # paper Eq. 2; or descend_then_mix
+    noise_std: float = 0.01        # sigma_0 for ssgd_star
+    n_learners: int = 16
+
+    def __post_init__(self):
+        assert self.algo in ("dpsgd", "ssgd", "ssgd_star"), self.algo
+        assert self.gossip_order in ("mix_then_descend", "descend_then_mix")
+        assert self.gossip_backend in ("einsum", "ppermute")
+
+
+# ---------------------------------------------------------------------------
+# gossip backends
+# ---------------------------------------------------------------------------
+
+def mix_einsum(stacked, m):
+    """w_i <- sum_j M_ij w_j applied to every leaf (paper-faithful reference)."""
+    def _mix(x):
+        # ellipsis einsum keeps trailing (model-sharded) dims intact — a
+        # flatten here would destroy the tensor-parallel sharding and force
+        # XLA to replicate every leaf (measured: 96 GB -> 1.6 GB temp).
+        out = jnp.einsum("ij,j...->i...", m.astype(jnp.float32),
+                         x.astype(jnp.float32))
+        return out.astype(x.dtype)
+    return jax.tree_util.tree_map(_mix, stacked)
+
+
+def mix_ppermute_ring(stacked, axis_names, self_weight: float = 1.0 / 3.0):
+    """Symmetric-ring gossip with two collective-permutes over the learner
+    mesh axis (to be called inside shard_map; leaves have NO learner dim
+    locally — the learner axis is the mesh axis itself)."""
+    n = jax.lax.psum(1, axis_names)
+    idx = jax.lax.axis_index(axis_names)
+    del idx
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+    side = (1.0 - self_weight) / 2.0
+
+    def _mix(x):
+        left = jax.lax.ppermute(x, axis_names, fwd)
+        right = jax.lax.ppermute(x, axis_names, bwd)
+        return (self_weight * x + side * (left + right)).astype(x.dtype)
+    return jax.tree_util.tree_map(_mix, stacked)
+
+
+def mix_ppermute_pair(stacked, axis_names, step):
+    """Pairwise gossip: partner = index XOR (1 << (step % log2 n)) — a
+    deterministic hypercube schedule whose per-step matching matches the
+    paper's random-neighbor rule in expectation, with ONE collective-permute.
+    Call inside shard_map."""
+    n = jax.lax.psum(1, axis_names)
+    assert n & (n - 1) == 0, "pairwise ppermute gossip needs power-of-two learners"
+    import math
+    log_n = int(math.log2(n))
+    # static schedule per step value is traced; build all log_n permutations and
+    # select by step % log_n using lax.switch to stay jittable.
+    def make_branch(bit):
+        perm = [(i, i ^ (1 << bit)) for i in range(n)]
+        def _b(x):
+            other = jax.lax.ppermute(x, axis_names, perm)
+            return (0.5 * (x + other)).astype(x.dtype)
+        return _b
+
+    branches = [make_branch(b) for b in range(log_n)]
+
+    def _mix(x):
+        return jax.lax.switch(step % log_n, branches, x)
+    return jax.tree_util.tree_map(_mix, stacked)
+
+
+def perturb_weights(key, params, std):
+    """SSGD*: w + delta, delta ~ N(0, std^2 I)."""
+    noise = tree_gaussian_like(key, params, std)
+    return jax.tree_util.tree_map(jnp.add, params, noise)
+
+
+def mean_broadcast(stacked):
+    """Replace every learner's weights by the global average (SSGD sync)."""
+    mean = learner_mean(stacked)
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    return jax.tree_util.tree_map(
+        lambda m: jnp.broadcast_to(m[None], (n,) + m.shape), mean)

@@ -1,0 +1,135 @@
+"""Gossip topologies / mixing matrices for decentralized SGD.
+
+A mixing (gossip) matrix M is row-stochastic (each learner's new weights are a
+convex combination of neighbors' weights); for the paper's analysis to hold
+(the average weight w_a evolves by the average gradient, Eq. 3) M must be
+doubly stochastic.  All matrices produced here are symmetric doubly stochastic.
+
+The paper's production recipe (Sec. 4, App. F): each learner picks a *random
+neighbor* each iteration and the pair averages their weights -> a random
+perfect-matching permutation-pairing matrix.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "full_matrix",
+    "ring_matrix",
+    "torus_matrix",
+    "random_pair_matrix",
+    "hierarchical_matrix",
+    "is_doubly_stochastic",
+    "spectral_gap",
+    "make_mixing_fn",
+]
+
+
+def full_matrix(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """All-to-all averaging: DPSGD degenerates to SSGD weight dynamics."""
+    return jnp.full((n, n), 1.0 / n, dtype=dtype)
+
+
+def ring_matrix(n: int, self_weight: float = 1.0 / 3.0, dtype=jnp.float32) -> jnp.ndarray:
+    """Symmetric ring: average with left and right neighbor."""
+    if n == 1:
+        return jnp.ones((1, 1), dtype)
+    if n == 2:
+        return jnp.full((2, 2), 0.5, dtype=dtype)
+    side = (1.0 - self_weight) / 2.0
+    eye = np.eye(n)
+    left = np.roll(np.eye(n), 1, axis=1)
+    right = np.roll(np.eye(n), -1, axis=1)
+    return jnp.asarray(self_weight * eye + side * (left + right), dtype=dtype)
+
+
+def torus_matrix(rows: int, cols: int, dtype=jnp.float32) -> jnp.ndarray:
+    """2D torus: self + 4 neighbors, weight 1/5 each."""
+    n = rows * cols
+    m = np.zeros((n, n))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            nbrs = [i,
+                    ((r + 1) % rows) * cols + c,
+                    ((r - 1) % rows) * cols + c,
+                    r * cols + (c + 1) % cols,
+                    r * cols + (c - 1) % cols]
+            for j in nbrs:
+                m[i, j] += 1.0 / 5.0
+    return jnp.asarray(m, dtype=dtype)
+
+
+def random_pair_matrix(key: jax.Array, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Random perfect matching: each learner averages with exactly one partner.
+
+    Implemented as 0.5*(I + P) where P is a random involutive pairing
+    permutation.  For odd n one learner stays solo that step.  This is the
+    paper's "randomly pick a neighbor to exchange weights" rule.
+    Built with jnp so it can live inside a jitted train step keyed on the step.
+    """
+    perm = jax.random.permutation(key, n)
+    # pair consecutive entries of the random permutation
+    k = (n // 2) * 2
+    a = perm[:k:2]
+    b = perm[1:k:2]
+    partner = jnp.arange(n)
+    partner = partner.at[a].set(b)
+    partner = partner.at[b].set(a)
+    p = jnp.zeros((n, n), dtype).at[jnp.arange(n), partner].set(1.0)
+    return 0.5 * (jnp.eye(n, dtype=dtype) + p)
+
+
+def hierarchical_matrix(n_super: int, group: int, inner: str = "full",
+                        dtype=jnp.float32) -> jnp.ndarray:
+    """Paper App. F: group `group` nearby learners into a super-learner that
+    fully averages internally, ring-gossip across super-learners."""
+    n = n_super * group
+    intra = np.kron(np.eye(n_super), np.full((group, group), 1.0 / group))
+    outer = np.asarray(ring_matrix(n_super))
+    inter = np.kron(outer, np.full((group, group), 1.0 / group))
+    # one intra-average then one inter-ring step; composition stays d.s.
+    m = inter @ intra
+    return jnp.asarray(m, dtype=dtype)
+
+
+def is_doubly_stochastic(m, atol: float = 1e-5) -> bool:
+    m = np.asarray(m, dtype=np.float64)
+    return (np.all(m >= -atol)
+            and np.allclose(m.sum(0), 1.0, atol=atol)
+            and np.allclose(m.sum(1), 1.0, atol=atol))
+
+
+def spectral_gap(m) -> float:
+    """1 - |lambda_2|: convergence rate of the gossip averaging process."""
+    ev = np.linalg.eigvals(np.asarray(m, dtype=np.float64))
+    ev = np.sort(np.abs(ev))[::-1]
+    return float(1.0 - (ev[1] if len(ev) > 1 else 0.0))
+
+
+def make_mixing_fn(topology: str, n: int):
+    """Returns mix_matrix(key, step) -> (n, n) mixing matrix for a step.
+
+    Static topologies ignore the key; 'random_pair' re-draws per step.
+    """
+    topology = topology.lower()
+    if topology == "full":
+        m = full_matrix(n)
+        return lambda key: m
+    if topology == "ring":
+        m = ring_matrix(n)
+        return lambda key: m
+    if topology == "torus":
+        r = int(np.sqrt(n))
+        while n % r:
+            r -= 1
+        m = torus_matrix(r, n // r)
+        return lambda key: m
+    if topology == "random_pair":
+        return lambda key: random_pair_matrix(key, n)
+    if topology == "solo":  # no mixing at all (local SGD w/o averaging)
+        m = jnp.eye(n)
+        return lambda key: m
+    raise ValueError(f"unknown topology: {topology}")

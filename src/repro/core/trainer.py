@@ -1,0 +1,138 @@
+"""MultiLearnerTrainer — research-scale driver for SSGD / SSGD* / DPSGD.
+
+Semantics (paper Sec. 2):
+  SSGD   : g_j = grad L^{mu_j}(w_a);          w_a <- w_a + opt(mean_j g_j)
+  SSGD*  : g_j = grad L^{mu_j}(w_a + delta_j) with delta_j ~ N(0, sigma0^2 I)
+  DPSGD  : g_j = grad L^{mu_j}(w_j);          w_j <- mix(w)_j + opt_j(g_j)
+
+State always carries *stacked* params (leading learner axis n) so the three
+algorithms are interchangeable and all diagnostics apply uniformly.  For SSGD
+the stacked copies stay bitwise identical (asserted in tests).
+
+This module is the CPU-scale research path (vmap over learners on one
+device).  The production pjit/shard_map path lives in repro/launch/train.py
+and reuses the same pure update functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import topology as topo
+from .diagnostics import DiagStats, compute_diagnostics
+from .dpsgd import AlgoConfig, mean_broadcast, mix_einsum, perturb_weights
+from .util import learner_mean, learner_var
+from ..optim import Optimizer, apply_updates
+
+
+class TrainState(NamedTuple):
+    params: Any           # stacked: leaves (n, ...)
+    opt_state: Any        # stacked per-learner
+    step: jnp.ndarray
+    rng: jax.Array
+
+
+class StepMetrics(NamedTuple):
+    loss: jnp.ndarray          # mean per-learner minibatch loss
+    grad_norm: jnp.ndarray     # ||g_a||
+    sigma_w_sq: jnp.ndarray    # weight variance across learners
+
+
+@dataclasses.dataclass
+class MultiLearnerTrainer:
+    loss_fn: Callable          # (params, batch) -> scalar, one learner's minibatch
+    optimizer: Optimizer
+    algo: AlgoConfig
+    alpha_for_diag: float = 1.0   # alpha used in the alpha_e instrument
+
+    def __post_init__(self):
+        self._mix_fn = topo.make_mixing_fn(self.algo.topology, self.algo.n_learners)
+        # jit once per trainer instance (self is not hashable -> close over it)
+        self.train_step = jax.jit(self._train_step)
+        self.diagnostics = jax.jit(self._diagnostics)
+        self.eval_loss = jax.jit(self._eval_loss)
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key: jax.Array, params_single) -> TrainState:
+        n = self.algo.n_learners
+        stacked = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p[None], (n,) + p.shape).copy(), params_single)
+        opt_state = jax.vmap(self.optimizer.init)(stacked)
+        return TrainState(stacked, opt_state, jnp.zeros((), jnp.int32), key)
+
+    # -- one training step ----------------------------------------------------
+    def _train_step(self, state: TrainState, stacked_batch):
+        """stacked_batch leaves: (n, B_local, ...)."""
+        algo = self.algo
+        key = jax.random.fold_in(state.rng, state.step)
+        k_mix, k_noise = jax.random.split(key)
+
+        grad_fn = jax.value_and_grad(self.loss_fn)
+
+        if algo.algo == "ssgd":
+            w_a = learner_mean(state.params)
+            losses, grads = jax.vmap(grad_fn, in_axes=(None, 0))(w_a, stacked_batch)
+            g_mean = learner_mean(grads)
+            # identical update on every learner keeps copies in sync
+            g_stacked = jax.tree_util.tree_map(
+                lambda g: jnp.broadcast_to(g[None], (algo.n_learners,) + g.shape),
+                g_mean)
+            updates, opt_state = jax.vmap(self.optimizer.update)(
+                g_stacked, state.opt_state, state.params)
+            new_params = apply_updates(state.params, updates)
+            new_params = mean_broadcast(new_params)
+
+        elif algo.algo == "ssgd_star":
+            w_a = learner_mean(state.params)
+            noisy = perturb_weights(
+                k_noise,
+                jax.tree_util.tree_map(
+                    lambda p: jnp.broadcast_to(p[None],
+                                               (algo.n_learners,) + p.shape), w_a),
+                algo.noise_std)
+            losses, grads = jax.vmap(grad_fn)(noisy, stacked_batch)
+            g_mean = learner_mean(grads)
+            g_stacked = jax.tree_util.tree_map(
+                lambda g: jnp.broadcast_to(g[None], (algo.n_learners,) + g.shape),
+                g_mean)
+            updates, opt_state = jax.vmap(self.optimizer.update)(
+                g_stacked, state.opt_state, state.params)
+            new_params = apply_updates(state.params, updates)
+            new_params = mean_broadcast(new_params)
+
+        elif algo.algo == "dpsgd":
+            # gradients at LOCAL weights (the whole point of the paper)
+            losses, grads = jax.vmap(grad_fn)(state.params, stacked_batch)
+            updates, opt_state = jax.vmap(self.optimizer.update)(
+                grads, state.opt_state, state.params)
+            m = self._mix_fn(k_mix)
+            if algo.gossip_order == "mix_then_descend":   # paper Eq. 2
+                mixed = mix_einsum(state.params, m)
+                new_params = apply_updates(mixed, updates)
+            else:                                          # descend_then_mix
+                new_params = mix_einsum(apply_updates(state.params, updates), m)
+        else:
+            raise ValueError(algo.algo)
+
+        metrics = StepMetrics(
+            loss=jnp.mean(losses),
+            grad_norm=jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                   for g in jax.tree_util.tree_leaves(
+                                       learner_mean(grads)))),
+            sigma_w_sq=learner_var(new_params),
+        )
+        return TrainState(new_params, opt_state, state.step + 1, state.rng), metrics
+
+    # -- diagnostics (paper Fig. 2b / Fig. 4) ---------------------------------
+    def _diagnostics(self, state: TrainState, stacked_batch) -> DiagStats:
+        return compute_diagnostics(self.loss_fn, state.params, stacked_batch,
+                                   self.alpha_for_diag)
+
+    # -- eval ----------------------------------------------------------------
+    def _eval_loss(self, state: TrainState, batch):
+        """Loss of the average model on a (B, ...) batch (heldout metric)."""
+        return self.loss_fn(learner_mean(state.params), batch)

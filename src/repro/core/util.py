@@ -1,0 +1,60 @@
+"""Pytree helpers shared by the multi-learner machinery."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["tree_dot", "tree_norm_sq", "tree_add", "tree_sub", "tree_scale",
+           "learner_mean", "learner_var", "tree_zeros_like", "tree_gaussian_like",
+           "global_norm"]
+
+
+def tree_dot(a, b):
+    leaves = jax.tree_util.tree_map(
+        lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def tree_norm_sq(a):
+    return tree_dot(a, a)
+
+
+def global_norm(a):
+    return jnp.sqrt(tree_norm_sq(a))
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return jax.tree_util.tree_map(lambda x: s * x, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_gaussian_like(key, a, std):
+    """iid N(0, std^2) noise with the same structure/shapes as `a` (SSGD*)."""
+    leaves, treedef = jax.tree_util.tree_flatten(a)
+    keys = jax.random.split(key, len(leaves))
+    noisy = [std * jax.random.normal(k, l.shape, l.dtype) for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, noisy)
+
+
+def learner_mean(stacked):
+    """Mean over the leading learner axis of every leaf: w_a = (1/n) sum w_j."""
+    return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), stacked)
+
+
+def learner_var(stacked):
+    """sigma_w^2 = Tr(C) summed over all parameters: total variance of the
+    learner weights around their mean (the paper's weight-variance instrument)."""
+    leaves = jax.tree_util.tree_map(
+        lambda x: jnp.sum(jnp.var(x.astype(jnp.float32), axis=0)), stacked)
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))

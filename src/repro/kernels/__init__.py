@@ -1,0 +1,7 @@
+from .ops import flash_attention, dpsgd_fused_update
+from .gossip_mix import gossip_mix_update, flatten_for_kernel
+from .flash_attention import flash_attention_fwd
+from . import ref
+
+__all__ = ["flash_attention", "dpsgd_fused_update", "gossip_mix_update",
+           "flatten_for_kernel", "flash_attention_fwd", "ref"]

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused gossip-mix + momentum-SGD update.
+
+The DPSGD inner loop per learner i is
+
+    mixed_i = sum_j M_ij w_j            (neighbor average; j ranges over the
+                                         few non-zero mixing weights)
+    mu_i    = beta * mu_i + g_i         (momentum)
+    w_i     = mixed_i - lr * mu_i
+
+Unfused, XLA emits three separate HBM-bound passes over the full parameter
+vector (mix read/write, momentum read/write, apply read/write) ≈ 8P moves.
+The fused kernel streams each (8,128)-aligned block of {w_self, w_neighbors,
+g, mu} through VMEM once and writes {w_new, mu_new}: ≈ (3+k)P moves, a
+~2.2x HBM-traffic cut on the op that IS the paper's technique (arithmetic
+intensity < 1 flop/byte — pure bandwidth).
+
+Layout: the parameter pytree is flattened to a (T, 128) f32 view (padded);
+neighbor copies arrive as (K, T, 128) — on a real pod these are the
+ppermute-received buffers, here they are explicit inputs so the kernel is
+topology-agnostic (K = #non-zero off-diagonal mixing weights, usually 1-2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+BLOCK_ROWS = 256          # (256, 128) f32 block = 128 KiB / buffer in VMEM
+
+
+def _kernel(w_ref, nbr_ref, g_ref, mu_ref, coef_ref, w_out_ref, mu_out_ref,
+            *, n_neighbors: int, lr: float, beta: float):
+    """One (BLOCK_ROWS, LANE) tile.
+
+    coef_ref: (1 + K,) f32 in SMEM — [self_coef, neighbor coefs...].
+    """
+    w = w_ref[...]
+    mixed = coef_ref[0] * w
+    for k in range(n_neighbors):
+        mixed += coef_ref[k + 1] * nbr_ref[k]
+    mu_new = beta * mu_ref[...] + g_ref[...]
+    w_out_ref[...] = mixed - lr * mu_new
+    mu_out_ref[...] = mu_new
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lr", "beta", "interpret", "block_rows"))
+def gossip_mix_update(w, neighbors, grads, momentum, coefs, *, lr: float,
+                      beta: float = 0.9, interpret: bool = False,
+                      block_rows: int = BLOCK_ROWS):
+    """w, grads, momentum: (T, 128) f32; neighbors: (K, T, 128);
+    coefs: (1 + K,) f32 mixing weights (self first).  Returns (w_new, mu_new).
+    """
+    T, lane = w.shape
+    assert lane == LANE, lane
+    K = neighbors.shape[0]
+    rows = min(block_rows, T)
+    assert T % rows == 0, (T, rows)
+    grid = (T // rows,)
+
+    kern = functools.partial(_kernel, n_neighbors=K, lr=lr, beta=beta)
+    block = pl.BlockSpec((rows, LANE), lambda i: (i, 0))
+    nbr_block = pl.BlockSpec((K, rows, LANE), lambda i: (0, i, 0))
+    coef_block = pl.BlockSpec((K + 1,), lambda i: (0,))
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[block, nbr_block, block, block, coef_block],
+        out_specs=[block, block],
+        out_shape=[jax.ShapeDtypeStruct((T, LANE), w.dtype),
+                   jax.ShapeDtypeStruct((T, LANE), momentum.dtype)],
+        interpret=interpret,
+    )(w, neighbors, grads, momentum, coefs)
+
+
+# ---------------------------------------------------------------------------
+# pytree-level wrapper: flatten -> kernel -> unflatten
+# ---------------------------------------------------------------------------
+
+def flatten_for_kernel(tree):
+    """Pytree -> ((T,128) f32 view, unflatten_fn)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    sizes = [l.size for l in leaves]
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
+    pad = (-flat.size) % LANE
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    view = flat.reshape(-1, LANE)
+
+    def unflatten(view2):
+        flat2 = view2.reshape(-1)[:sum(sizes)]
+        out, off = [], 0
+        for l, sz in zip(leaves, sizes):
+            out.append(flat2[off:off + sz].reshape(l.shape).astype(l.dtype))
+            off += sz
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return view, unflatten

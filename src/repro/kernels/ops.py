@@ -1,0 +1,88 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+`flash_attention` accepts the model-layout (B, S, H, hd) tensors used by
+repro.models.attention and adds a custom VJP whose backward pass is the
+jnp reference gradient (forward runs the kernel; backward recomputes through
+the oracle — numerically identical, documented trade-off).
+
+On CPU (this container) the kernels run in interpret mode automatically;
+on TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_fwd
+from .gossip_mix import gossip_mix_update, flatten_for_kernel
+from . import ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, attn_softcap, q_positions, k_positions):
+    # layout: (B, S, H, hd) -> kernel layout (B, H, S, hd)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                            attn_softcap=attn_softcap, interpret=_on_cpu())
+    return o.transpose(0, 2, 1, 3)
+
+
+def _ref_bsh(q, k, v, causal, window, attn_softcap):
+    o = ref.flash_attention_ref(q.transpose(0, 2, 1, 3),
+                                k.transpose(0, 2, 1, 3),
+                                v.transpose(0, 2, 1, 3),
+                                causal=causal, window=window,
+                                attn_softcap=attn_softcap)
+    return o.transpose(0, 2, 1, 3)
+
+
+def _flash_fwd(q, k, v, causal, window, attn_softcap, qp, kp):
+    return _flash(q, k, v, causal, window, attn_softcap, qp, kp), (q, k, v)
+
+
+def _flash_bwd(causal, window, attn_softcap, qp, kp, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _ref_bsh(q_, k_, v_, causal, window,
+                                                 attn_softcap), q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, q_positions=None, k_positions=None,
+                    causal: bool = True, window: int = 0,
+                    attn_softcap: float = 0.0):
+    """Model-layout flash attention.  q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd).
+
+    Assumes contiguous positions from 0 (training/prefill); the explicit
+    position arrays are accepted for API parity with chunked_attention and
+    validated when concrete.
+    """
+    return _flash(q, k, v, causal, window, attn_softcap, q_positions,
+                  k_positions)
+
+
+def dpsgd_fused_update(params_tree, neighbor_trees, grads_tree, momentum_tree,
+                       coefs, *, lr: float, beta: float = 0.9):
+    """Pytree-level fused gossip+momentum update (see kernels.gossip_mix).
+
+    neighbor_trees: list of pytrees (the ppermute-received weight replicas).
+    Returns (new_params_tree, new_momentum_tree).
+    """
+    w, unflatten_w = flatten_for_kernel(params_tree)
+    mu, unflatten_mu = flatten_for_kernel(momentum_tree)
+    g, _ = flatten_for_kernel(grads_tree)
+    nbrs = jnp.stack([flatten_for_kernel(t)[0] for t in neighbor_trees])
+    w_new, mu_new = gossip_mix_update(w, nbrs, g, mu,
+                                      jnp.asarray(coefs, jnp.float32),
+                                      lr=lr, beta=beta, interpret=_on_cpu())
+    return unflatten_w(w_new), unflatten_mu(mu_new)

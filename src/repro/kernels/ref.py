@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gossip_mix_update_ref(w, neighbors, grads, momentum, coefs, *, lr: float,
+                          beta: float = 0.9):
+    """Same contract as kernels.gossip_mix.gossip_mix_update."""
+    mixed = coefs[0] * w
+    for k in range(neighbors.shape[0]):
+        mixed = mixed + coefs[k + 1] * neighbors[k]
+    mu_new = beta * momentum + grads
+    return mixed - lr * mu_new, mu_new
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        attn_softcap: float = 0.0):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd).
+    Dense (unblocked) softmax attention with identical masking semantics."""
+    B, H, Sq, hd = q.shape
+    _, KV, Sk, _ = k.shape
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, Sq, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qf, kf) * hd ** -0.5
+    if attn_softcap:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, vf)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)

@@ -1,0 +1,4 @@
+from .mesh import make_production_mesh, make_test_mesh, learner_axes, n_learners
+
+__all__ = ["make_production_mesh", "make_test_mesh", "learner_axes",
+           "n_learners"]

@@ -1,0 +1,152 @@
+"""Sharding rules: pytree path -> PartitionSpec.
+
+Megatron-style tensor parallelism over the 'model' axis, expressed as a
+name-aware heuristic that is exact for every architecture in the registry:
+
+  * 1-D leaves (norms, biases, gates)            -> replicated
+  * 'wo' / 'w2' / 'down' / 'out_proj' leaves     -> row-parallel (first
+    divisible dim), closing the Megatron col->row pair so the only FFN/attn
+    collective is the one all-reduce after the row matmul
+  * expert tensors (path contains 'mlp' and ndim==3, or 'router')
+        -> expert-parallel over dim 0 when E % model == 0, else shard d_ff
+  * everything else                              -> column-parallel (largest
+    divisible dim, ties broken toward the last dim)
+
+Training adds a leading learner dim sharded over the learner axes.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+ROW_TOKENS = ("wo", "w2", "down", "out_proj")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                    for p in path).lower()
+
+
+def _pick_dim(shape, model_size: int, prefer_first: bool):
+    divisible = [i for i, s in enumerate(shape) if s % model_size == 0 and
+                 s >= model_size]
+    if not divisible:
+        return None
+    best = max(divisible, key=lambda i: (shape[i], -i if prefer_first else i))
+    return best
+
+
+def leaf_spec(path, leaf, model_size: int, *, model_axis: str = "model",
+              learner_axes=None) -> P:
+    """PartitionSpec for one (possibly learner-stacked) param leaf."""
+    name = _path_str(path)
+    shape = leaf.shape
+    offset = 0
+    lead = ()
+    if learner_axes:
+        lead = (learner_axes,)
+        offset = 1
+        shape = shape[1:]
+
+    if len(shape) <= 1:
+        return P(*lead, *([None] * len(shape)))
+
+    is_expert = ("mlp" in name and len(shape) == 3) or \
+                ("experts" in name and len(shape) == 3)
+    row = any(t in name for t in ROW_TOKENS)
+
+    if is_expert:
+        E = shape[0]
+        if E % model_size == 0:
+            dim = 0
+        else:
+            # shard the ff dim: w1/w3 (E, d, ff) -> 2 ; w2 (E, ff, d) -> 1
+            dim = 1 if row else 2
+            if shape[dim] % model_size:
+                dim = _pick_dim(shape, model_size, prefer_first=row)
+    else:
+        dim = _pick_dim(shape, model_size, prefer_first=row)
+
+    spec = [None] * len(shape)
+    if dim is not None:
+        spec[dim] = model_axis
+    return P(*lead, *spec)
+
+
+def params_sharding(params_shapes, mesh, *, stacked: bool):
+    """Pytree of PartitionSpec matching a params pytree (of shapes/arrays)."""
+    model_size = mesh.shape["model"]
+    l_axes = tuple(a for a in mesh.axis_names if a != "model") if stacked \
+        else None
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = [leaf_spec(path, leaf, model_size, learner_axes=l_axes)
+             for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_sharding(batch_shapes, mesh, *, stacked: bool):
+    """Batch leaves: (L, B_local, ...) stacked or (GB, ...) flat.  dim0 over
+    the learner axes when divisible; everything else replicated."""
+    l_axes = tuple(a for a in mesh.axis_names if a != "model")
+    n_l = 1
+    for a in l_axes:
+        n_l *= mesh.shape[a]
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return P()
+        if leaf.shape[0] % n_l == 0 and leaf.shape[0] >= n_l:
+            return P(l_axes, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree_util.tree_map(one, batch_shapes)
+
+
+def cache_sharding(cache_shapes, mesh):
+    """Decode caches.  Leaves are period-stacked (Np, B, ...).
+
+    Rules (per EXPERIMENTS.md §Perf H3): batch (dim 1) over the learner
+    axes; for attention K/V caches (Np, B, W, KV, hd) the TIME dim W is
+    sharded over `model` — *sequence-sharded KV cache*.  Sharding the head
+    dim instead makes the decode einsum contract over a sharded axis and XLA
+    all-gathers the entire cache every layer (measured 97 GB/step for
+    mistral-large decode_32k); with W sharded, the only cross-shard traffic
+    is the tiny softmax/output reduction.  SSM/conv state tensors shard
+    their feature dim over `model`.  slot_pos bookkeeping is replicated.
+    """
+    model_size = mesh.shape["model"]
+    l_axes = tuple(a for a in mesh.axis_names if a != "model")
+    n_l = 1
+    for a in l_axes:
+        n_l *= mesh.shape[a]
+
+    def one(path, leaf):
+        name = _path_str(path)
+        nd = leaf.ndim
+        spec = [None] * nd
+        if "slot_pos" in name:
+            return P(*spec)
+        if nd >= 2 and leaf.shape[1] % n_l == 0 and leaf.shape[1] >= n_l:
+            spec[1] = l_axes          # batch dim (after period-stack dim)
+        is_attn_kv = nd == 5 or ("xk" in name or "xv" in name)
+        if is_attn_kv:
+            w_dim = nd - 3            # (..., W, KV, hd)
+            if leaf.shape[w_dim] % model_size == 0 \
+                    and leaf.shape[w_dim] >= model_size:
+                spec[w_dim] = "model"
+                return P(*spec)
+        # SSM/conv/mLSTM states: biggest divisible trailing dim over model
+        for d in (nd - 2, nd - 1):
+            if d < 2:
+                continue
+            if spec[d] is None and leaf.shape[d] % model_size == 0 \
+                    and leaf.shape[d] >= model_size:
+                spec[d] = "model"
+                break
+        return P(*spec)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])

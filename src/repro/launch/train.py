@@ -1,0 +1,167 @@
+"""Production (pjit/shard_map) step builders.
+
+Training (the paper's setting):
+  * DPSGD  — params carry a leading learner axis sharded over the learner
+    mesh axes; gradients are purely local (NO gradient collective — the
+    paper's point); the only cross-learner traffic is the gossip mix.
+       gossip_backend='einsum'   : paper-faithful reference (L x L mixing
+                                   matrix; XLA emits an all-gather over the
+                                   learner axis — O(L*P) traffic)
+       gossip_backend='ppermute' : TPU-native ring gossip via shard_map +
+                                   collective-permute — O(P) traffic
+                                   (beyond-paper optimization, see §Perf)
+  * SSGD   — classic data parallелism: replicated params, psum'd grads
+    (the baseline the paper compares against).
+
+Serving: prefill (full forward) and decode (one token vs a rotating KV
+cache) with the inference sharding rules from launch/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.dpsgd import mix_einsum, mix_ppermute_ring
+from ..core.topology import random_pair_matrix, ring_matrix
+from ..models.model import ModelAPI
+from ..models.shard_hints import activation_batch_axes
+from ..optim import Optimizer, apply_updates
+from . import sharding as shd
+from .mesh import learner_axes, n_learners
+
+
+class PjitTrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+    rng: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# DPSGD
+# ---------------------------------------------------------------------------
+
+def make_dpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh,
+                          topology: str = "random_pair",
+                          gossip_backend: str = "einsum") -> Callable:
+    L = n_learners(mesh)
+    l_axes = learner_axes(mesh)
+
+    def gossip(params, key):
+        if gossip_backend == "einsum":
+            if topology == "ring":
+                m = ring_matrix(L)
+            else:
+                m = random_pair_matrix(key, L)
+            return mix_einsum(params, m)
+        # ppermute ring inside shard_map (only the learner axes are mapped)
+        specs = shd.params_sharding(params, mesh, stacked=True)
+
+        def local(p):
+            mixed = mix_ppermute_ring(p, l_axes)
+            return mixed
+
+        return jax.shard_map(local, mesh=mesh, in_specs=(specs,),
+                             out_specs=specs)(params)
+
+    def train_step(state: PjitTrainState, batch):
+        # batch leaves: (GB, ...) -> (L, B_local, ...)
+        stacked_batch = jax.tree_util.tree_map(
+            lambda x: x.reshape((L, x.shape[0] // L) + x.shape[1:]), batch)
+        # spmd_axis_name: in-model activation constraints (residual_hint)
+        # see the learner dim sharded over the learner mesh axes; the
+        # per-learner batch itself is unsharded -> batch axes context ()
+        with activation_batch_axes(()):
+            losses, grads = jax.vmap(jax.value_and_grad(api.loss_fn),
+                                     in_axes=(0, 0),
+                                     spmd_axis_name=l_axes)(
+                state.params, stacked_batch)
+        updates, opt_state = jax.vmap(optimizer.update)(
+            grads, state.opt_state, state.params)
+        key = jax.random.fold_in(state.rng, state.step)
+        mixed = gossip(state.params, key)              # paper Eq. 2 ordering
+        new_params = apply_updates(mixed, updates)
+        metrics = {"loss": jnp.mean(losses)}
+        return PjitTrainState(new_params, opt_state, state.step + 1,
+                              state.rng), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# SSGD baseline
+# ---------------------------------------------------------------------------
+
+def make_ssgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh) -> Callable:
+    def train_step(state: PjitTrainState, batch):
+        loss, grads = jax.value_and_grad(api.loss_fn)(state.params, batch)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        new_params = apply_updates(state.params, updates)
+        return PjitTrainState(new_params, opt_state, state.step + 1,
+                              state.rng), {"loss": loss}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(api: ModelAPI) -> Callable:
+    def prefill(params, batch):
+        return api.apply(params, batch)
+    return prefill
+
+
+def make_decode_step(api: ModelAPI) -> Callable:
+    def decode(params, cache, tokens, pos):
+        return api.decode_step(params, cache, tokens, pos)
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# spec builders (shapes only — nothing allocated; dryrun + tests share these)
+# ---------------------------------------------------------------------------
+
+def stacked_param_specs(api: ModelAPI, L: int):
+    single = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((L,) + s.shape, s.dtype), single)
+
+
+def train_state_specs(api: ModelAPI, optimizer: Optimizer, mesh, *,
+                      algo: str):
+    L = n_learners(mesh)
+    if algo == "dpsgd":
+        p = stacked_param_specs(api, L)
+        o = jax.eval_shape(lambda q: jax.vmap(optimizer.init)(q), p)
+    else:
+        p = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+        o = jax.eval_shape(optimizer.init, p)
+    return PjitTrainState(
+        params=p, opt_state=o,
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        rng=jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def train_state_shardings(state_specs: PjitTrainState, mesh, *, algo: str):
+    stacked = algo == "dpsgd"
+    p = shd.params_sharding(state_specs.params, mesh, stacked=stacked)
+    # optimizer state mirrors params (momentum etc.), scalars replicated
+    def opt_spec(path, leaf):
+        if leaf.ndim <= 1:
+            return P(*([None] * leaf.ndim))
+        return shd.leaf_spec(path, leaf, mesh.shape["model"],
+                             learner_axes=(tuple(
+                                 a for a in mesh.axis_names if a != "model")
+                                 if stacked else None))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_specs.opt_state)
+    o = jax.tree_util.tree_unflatten(
+        treedef, [opt_spec(pa, l) for pa, l in flat])
+    return PjitTrainState(params=p, opt_state=o, step=P(), rng=P())

@@ -1,0 +1,4 @@
+from .model import ModelAPI, build_model, make_synthetic_batch
+from . import fcnet
+
+__all__ = ["ModelAPI", "build_model", "make_synthetic_batch", "fcnet"]

@@ -1,0 +1,192 @@
+"""Encoder-decoder transformer (seamless-m4t-large-v2 backbone).
+
+Encoder: bidirectional self-attention over *stub* audio-frame embeddings
+(the conformer/mel frontend is the assignment's sanctioned carve-out).
+Decoder: causal self-attention + cross-attention + FFN, over text tokens.
+Both sides scan over layers.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .attention import (attn_decode, attn_forward, init_attn_cache,
+                        init_attn_params)
+from .layers import (cross_entropy, dense_init, dtype_of, embed_init,
+                     rms_norm, softcap)
+from .transformer import make_rope_fn
+
+
+def _init_ff(key, d, ff, dt):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w1": dense_init(k1, d, ff, dt), "w3": dense_init(k2, d, ff, dt),
+            "w2": dense_init(k3, ff, d, dt)}
+
+
+def _ff(p, x):
+    return (jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])) @ p["w2"]
+
+
+def init_params(key, cfg: ModelConfig):
+    dt = dtype_of(cfg.param_dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"norm1": jnp.zeros((d,), jnp.float32),
+                "attn": init_attn_params(k1, d, cfg.n_heads, cfg.n_kv_heads,
+                                         cfg.head_dim_, dt),
+                "norm2": jnp.zeros((d,), jnp.float32),
+                "mlp": _init_ff(k2, d, cfg.d_ff, dt)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"norm1": jnp.zeros((d,), jnp.float32),
+                "self_attn": init_attn_params(k1, d, cfg.n_heads,
+                                              cfg.n_kv_heads, cfg.head_dim_, dt),
+                "norm_x": jnp.zeros((d,), jnp.float32),
+                "cross_attn": init_attn_params(k2, d, cfg.n_heads,
+                                               cfg.n_kv_heads, cfg.head_dim_, dt),
+                "norm2": jnp.zeros((d,), jnp.float32),
+                "mlp": _init_ff(k3, d, cfg.d_ff, dt)}
+
+    return {
+        "embed": embed_init(ks[0], cfg.padded_vocab, d, dt),
+        "enc_layers": jax.vmap(enc_layer)(jax.random.split(ks[1], cfg.enc_layers)),
+        "enc_norm": jnp.zeros((d,), jnp.float32),
+        "dec_layers": jax.vmap(dec_layer)(jax.random.split(ks[2], cfg.n_layers)),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+        "lm_head": dense_init(ks[3], d, cfg.padded_vocab, dt),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, S_enc, d) stub audio embeddings -> (B, S_enc, d)."""
+    S = frames.shape[1]
+    pos = jnp.arange(S)
+    rope_fn = make_rope_fn(cfg)
+
+    @jax.checkpoint
+    def layer_body(x, lp):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        h = attn_forward(lp["attn"], h, n_heads=cfg.n_heads,
+                         n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                         rope_fn=rope_fn, q_positions=pos, causal=False,
+                         chunk=cfg.attn_chunk, use_pallas=cfg.use_pallas)
+        x = x + h
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        return x + _ff(lp["mlp"], h)
+
+    def layer(x, lp):
+        return layer_body(x, lp), None
+
+    x, _ = jax.lax.scan(layer, frames, params["enc_layers"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def decode_train(params, cfg: ModelConfig, tokens, memory):
+    """tokens: (B, S_dec); memory: (B, S_enc, d) -> logits."""
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    S = x.shape[1]
+    pos = jnp.arange(S)
+    rope_fn = make_rope_fn(cfg)
+
+    @jax.checkpoint
+    def layer_body(x, lp):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        h = attn_forward(lp["self_attn"], h, n_heads=cfg.n_heads,
+                         n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                         rope_fn=rope_fn, q_positions=pos, causal=True,
+                         chunk=cfg.attn_chunk, use_pallas=cfg.use_pallas)
+        x = x + h
+        h = rms_norm(x, lp["norm_x"], cfg.norm_eps)
+        h = attn_forward(lp["cross_attn"], h, n_heads=cfg.n_heads,
+                         n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                         rope_fn=rope_fn, q_positions=pos, kv_input=memory,
+                         causal=False, chunk=cfg.attn_chunk,
+                         use_pallas=cfg.use_pallas)
+        x = x + h
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        return x + _ff(lp["mlp"], h)
+
+    def layer(x, lp):
+        return layer_body(x, lp), None
+
+    x, _ = jax.lax.scan(layer, x, params["dec_layers"])
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return h @ params["lm_head"]
+
+
+def apply(params, cfg: ModelConfig, frames, tokens):
+    memory = encode(params, cfg, frames)
+    return decode_train(params, cfg, tokens, memory)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(params, cfg: ModelConfig, frames, buf_len: int):
+    """Runs the encoder once and pre-computes per-layer cross K/V."""
+    memory = encode(params, cfg, frames)
+    B = memory.shape[0]
+    dt = dtype_of(cfg.param_dtype)
+
+    def one_layer(lp):
+        Sk = memory.shape[1]
+        k = (memory @ lp["cross_attn"]["wk"]).reshape(
+            B, Sk, cfg.n_kv_heads, cfg.head_dim_)
+        v = (memory @ lp["cross_attn"]["wv"]).reshape(
+            B, Sk, cfg.n_kv_heads, cfg.head_dim_)
+        rope_fn = make_rope_fn(cfg)
+        if rope_fn is not None:
+            k = rope_fn(k, jnp.arange(Sk))
+        return {"xk": k.astype(dt), "xv": v.astype(dt)}
+
+    cross = jax.vmap(one_layer)(params["dec_layers"])
+    self_c = init_attn_cache(B, buf_len, cfg.n_kv_heads, cfg.head_dim_, dt)
+    self_c = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape).copy(),
+        self_c)
+    return {"cross": cross, "self": self_c}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """tokens: (B, 1) -> (logits (B, 1, V), new_cache)."""
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    rope_fn = make_rope_fn(cfg)
+    NEG = -1e30
+
+    def layer(x, inp):
+        lp, cc, xc = inp
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        h, cc = attn_decode(lp["self_attn"], cc, h, pos, n_heads=cfg.n_heads,
+                            n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                            rope_fn=rope_fn)
+        x = x + h
+        # cross attention against precomputed memory K/V (no cache update)
+        h = rms_norm(x, lp["norm_x"], cfg.norm_eps)
+        B = x.shape[0]
+        q = (h @ lp["cross_attn"]["wq"]).reshape(B, 1, cfg.n_heads,
+                                                 cfg.head_dim_)
+        if rope_fn is not None:
+            q = rope_fn(q, jnp.reshape(pos, (1,)))
+        G = cfg.n_heads // cfg.n_kv_heads
+        qg = q.reshape(B, cfg.n_kv_heads, G, cfg.head_dim_)
+        s = jnp.einsum("bkgd,bwkd->bkgw", qg.astype(jnp.float32),
+                       xc["xk"].astype(jnp.float32)) * cfg.head_dim_ ** -0.5
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgw,bwkd->bkgd", p, xc["xv"].astype(jnp.float32))
+        o = o.reshape(B, 1, cfg.n_heads * cfg.head_dim_).astype(x.dtype)
+        x = x + o @ lp["cross_attn"]["wo"]
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        return x + _ff(lp["mlp"], h), cc
+
+    x, new_self = jax.lax.scan(
+        layer, x, (params["dec_layers"], cache["self"], cache["cross"]))
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return h @ params["lm_head"], {"cross": cache["cross"], "self": new_self}

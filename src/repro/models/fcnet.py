@@ -1,0 +1,37 @@
+"""The paper's MNIST network (Sec. 2): fully connected, two hidden layers of
+50 units — used for the Fig. 2 / Fig. 4 / Fig. 5 reproductions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import cross_entropy, dense_init
+
+
+def init_params(key, in_dim: int = 784, hidden: int = 50, n_classes: int = 10):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, in_dim, hidden, jnp.float32),
+        "b1": jnp.zeros((hidden,)),
+        "w2": dense_init(k2, hidden, hidden, jnp.float32),
+        "b2": jnp.zeros((hidden,)),
+        "w3": dense_init(k3, hidden, n_classes, jnp.float32),
+        "b3": jnp.zeros((n_classes,)),
+    }
+
+
+def apply(params, images):
+    x = images.reshape(images.shape[0], -1)
+    x = jax.nn.relu(x @ params["w1"] + params["b1"])
+    x = jax.nn.relu(x @ params["w2"] + params["b2"])
+    return x @ params["w3"] + params["b3"]
+
+
+def loss_fn(params, batch):
+    logits = apply(params, batch["image"])
+    return cross_entropy(logits, batch["label"])
+
+
+def accuracy(params, batch):
+    logits = apply(params, batch["image"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["label"]).astype(jnp.float32))

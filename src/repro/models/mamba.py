@@ -1,0 +1,153 @@
+"""Mamba (S6) selective-state-space block, TPU-adapted.
+
+The CUDA reference fuses a sequential selective scan into one kernel; the
+TPU-native adaptation uses a *chunked associative scan*: within a chunk the
+linear recurrence h_t = a_t * h_{t-1} + b_t is evaluated with
+jax.lax.associative_scan (log-depth, MXU-friendly), chunks are chained
+sequentially with the boundary state, and each chunk body is rematerialized
+in the backward pass so peak memory stays O(chunk * d_inner * state) instead
+of O(seq * d_inner * state).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+__all__ = ["init_mamba_params", "mamba_forward", "init_mamba_cache",
+           "mamba_decode"]
+
+
+def init_mamba_params(key, d_model: int, *, expand: int = 2, state: int = 16,
+                      conv: int = 4, dtype=jnp.float32):
+    di = expand * d_model
+    dt_rank = max(1, math.ceil(d_model / 16))
+    ks = jax.random.split(key, 7)
+    a = jnp.tile(jnp.arange(1, state + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d_model, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv, di)) / math.sqrt(conv)
+                   ).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * state, dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, di, dtype),
+        "dt_bias": (jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(ks[4], (di,))
+                             * (math.log(0.1) - math.log(0.001))
+                             + math.log(0.001)), 1e-4, None)))).astype(jnp.float32),
+        "a_log": jnp.log(a),                       # (di, state) fp32
+        "d": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], di, d_model, dtype),
+    }
+
+
+def _ssm_scan_chunked(a, b, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + b_t over axis 1.  a, b: (B, S, di, N); h0: (B, di, N).
+    Returns (hs (B, S, di, N), h_last)."""
+    B, S, di, N = a.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    ac = a.reshape(B, nc, c, di, N).transpose(1, 0, 2, 3, 4)
+    bc = b.reshape(B, nc, c, di, N).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def one_chunk(h, ab):
+        a_, b_ = ab
+        # fold the carry state into the first step
+        b_ = b_.at[:, 0].add(a_[:, 0] * h)
+
+        def combine(x, y):
+            ax, bx = x
+            ay, by = y
+            return ax * ay, ay * bx + by
+        _, hs = jax.lax.associative_scan(combine, (a_, b_), axis=1)
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(one_chunk, h0, (ac, bc))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, di, N)
+    return hs, h_last
+
+
+def mamba_forward(params, x, *, expand: int = 2, state: int = 16,
+                  conv: int = 4, scan_chunk: int = 64, h0=None,
+                  return_state: bool = False):
+    """x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    di = expand * d
+    dt_rank = params["dt_proj"].shape[0]
+
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                     # (B, S, di) each
+
+    # causal depthwise conv1d
+    pad = jnp.zeros((B, conv - 1, di), xin.dtype)
+    xp = jnp.concatenate([pad, xin], axis=1)
+    xc = sum(xp[:, i:i + S] * params["conv_w"][i] for i in range(conv))
+    xc = jax.nn.silu(xc + params["conv_b"])
+
+    proj = xc @ params["x_proj"]                           # (B, S, rank+2N)
+    dt_in, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"]
+                         + params["dt_bias"]).astype(jnp.float32)  # (B,S,di)
+    a = -jnp.exp(params["a_log"])                          # (di, N)
+    abar = jnp.exp(dt[..., None] * a)                      # (B,S,di,N)
+    bbar = (dt[..., None] * bmat[:, :, None, :].astype(jnp.float32)
+            * xc[..., None].astype(jnp.float32))           # (B,S,di,N)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, di, state), jnp.float32)
+    hs, h_last = _ssm_scan_chunked(abar, bbar, h0, scan_chunk)
+
+    y = jnp.einsum("bsdn,bsn->bsd", hs, cmat.astype(jnp.float32))
+    y = y + params["d"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, h_last
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) recurrent state
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(batch: int, d_model: int, *, expand: int = 2,
+                     state: int = 16, conv: int = 4, dtype=jnp.float32):
+    di = expand * d_model
+    return {"h": jnp.zeros((batch, di, state), jnp.float32),
+            "conv": jnp.zeros((batch, conv - 1, di), dtype)}
+
+
+def mamba_decode(params, cache, x, *, expand: int = 2, state: int = 16,
+                 conv: int = 4):
+    """x: (B, 1, d) -> (out (B, 1, d), new_cache)."""
+    B, _, d = x.shape
+    di = expand * d
+    dt_rank = params["dt_proj"].shape[0]
+
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                     # (B, 1, di)
+
+    hist = jnp.concatenate([cache["conv"], xin.astype(cache["conv"].dtype)],
+                           axis=1)                         # (B, conv, di)
+    xc = jnp.einsum("bcd,cd->bd", hist, params["conv_w"])[:, None]
+    xc = jax.nn.silu(xc + params["conv_b"])
+
+    proj = xc @ params["x_proj"]
+    dt_in, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ params["dt_proj"] + params["dt_bias"]
+                         ).astype(jnp.float32)
+    a = -jnp.exp(params["a_log"])
+    abar = jnp.exp(dt[:, 0, :, None] * a)                  # (B, di, N)
+    bbar = (dt[:, 0, :, None] * bmat[:, 0, None, :].astype(jnp.float32)
+            * xc[:, 0, :, None].astype(jnp.float32))
+    h = abar * cache["h"] + bbar
+    y = jnp.einsum("bdn,bn->bd", h, cmat[:, 0].astype(jnp.float32))
+    y = y + params["d"] * xc[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = (y @ params["out_proj"])[:, None]
+    return out, {"h": h, "conv": hist[:, 1:]}

@@ -1,0 +1,96 @@
+"""Mixture-of-Experts FFN: top-k router + capacity-bucketed expert matmuls.
+
+TPU-native dispatch (no GShard one-hot dispatch tensor, which would be
+(tokens x E x C) and explode at 32k sequence): tokens are scattered into an
+(E, C, d) buffer by (expert_id, rank-within-expert) computed with a cumsum —
+a single XLA scatter — then three einsums run all experts, then a gather
+brings results back and combine-weights sum the top-k contributions.
+
+Sharding: expert axis E goes over the `model` mesh axis when E % model == 0
+(expert parallelism, the all-to-all shows up in the dry-run collective
+analysis); otherwise the hidden dim f is sharded (tensor parallelism).
+Token overflow beyond capacity C = cf * k * T / E is dropped (standard);
+combine weights of kept assignments are renormalized over the kept set.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+__all__ = ["init_moe_params", "moe_forward"]
+
+
+def init_moe_params(key, d_model: int, d_ff: int, n_experts: int, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, d_model, n_experts, jnp.float32),
+        "w1": jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(k2, n_experts)),
+        "w3": jax.vmap(lambda k: dense_init(k, d_model, d_ff, dtype))(
+            jax.random.split(k3, n_experts)),
+        "w2": jax.vmap(lambda k: dense_init(k, d_ff, d_model, dtype))(
+            jax.random.split(k4, n_experts)),
+    }
+
+
+def moe_forward(params, x, *, n_experts: int, top_k: int,
+                capacity_factor: float = 1.25, return_aux: bool = False):
+    """x: (B, S, d) -> (B, S, d) [+ aux losses dict].
+
+    NOTE (EXPERIMENTS.md §Perf H1): under pjit SPMD this global scatter/
+    gather dispatch replicates the (T*k, d) combine tensors and all-reduces
+    them over `model` — with-sharding-constraint hints do NOT fix it (they
+    add an extra all-gather; measured).  The production serving path uses
+    moe_shardmap.moe_forward_shardmap (explicit all-to-all) instead.
+    """
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)        # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)      # renormalize
+
+    C = max(1, int(capacity_factor * top_k * T / n_experts))
+
+    # rank of each (token, k) assignment within its expert, in token order
+    flat_expert = expert_ids.reshape(-1)                        # (T*k,)
+    onehot = jax.nn.one_hot(flat_expert, n_experts, dtype=jnp.int32)  # (T*k, E)
+    ranks = jnp.cumsum(onehot, axis=0) - 1                      # 0-based
+    rank_in_expert = jnp.take_along_axis(
+        ranks, flat_expert[:, None], axis=1)[:, 0]              # (T*k,)
+    keep = rank_in_expert < C
+
+    # scatter tokens into (E, C, d); dropped assignments land in a trash row
+    slot_e = jnp.where(keep, flat_expert, 0)
+    slot_c = jnp.where(keep, rank_in_expert, C)                 # C = trash col
+    buf = jnp.zeros((n_experts, C + 1, d), x.dtype)
+    src = jnp.repeat(xt, top_k, axis=0)                         # (T*k, d)
+    buf = buf.at[slot_e, slot_c].set(src.astype(buf.dtype), mode="drop")
+    buf = buf[:, :C]                                            # (E, C, d)
+
+    # expert FFN (swiglu) on every bucket
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["w1"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, params["w3"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["w2"])       # (E, C, d)
+
+    # gather back and combine
+    gathered = out_buf[slot_e, jnp.minimum(slot_c, C - 1)]      # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    w = (gate_vals.reshape(-1) * keep.astype(gate_vals.dtype))[:, None]
+    yt = jnp.sum((gathered * w.astype(gathered.dtype)).reshape(T, top_k, d),
+                 axis=1)
+    y = yt.reshape(B, S, d)
+
+    if not return_aux:
+        return y
+    # Switch-style load-balance aux loss
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    ce = jnp.mean(jax.nn.one_hot(expert_ids[:, 0], n_experts), axis=0)
+    aux = {"load_balance": n_experts * jnp.sum(me * ce),
+           "dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32))}
+    return y, aux

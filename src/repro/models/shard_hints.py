@@ -1,0 +1,85 @@
+"""Conditional sharding hints: apply lax.with_sharding_constraint only when
+the current (abstract) mesh actually has the named axes — model code stays
+runnable on a bare CPU (tests) and acquires the right activation shardings
+under the production mesh (dry-run / real launch)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def mesh_axes() -> tuple:
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover - old jax
+        return ()
+    return tuple(getattr(am, "axis_names", ()) or ())
+
+
+def _filter(spec_entry, axes):
+    if spec_entry is None:
+        return None
+    if isinstance(spec_entry, (tuple, list)):
+        kept = tuple(a for a in spec_entry if a in axes)
+        return kept if kept else None
+    return spec_entry if spec_entry in axes else None
+
+
+def hint(x, *spec):
+    """with_sharding_constraint(x, P(*spec)) with unknown axes dropped.
+    No-op when there is no surrounding mesh."""
+    axes = mesh_axes()
+    if not axes:
+        return x
+    filtered = [_filter(s, axes) for s in spec]
+    if all(s is None for s in filtered):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*filtered))
+
+
+import contextlib
+import threading
+
+_CTX = threading.local()
+
+
+def batch_axes():
+    """Mesh axes that shard the activation batch dim in the CURRENT context.
+    Serving (pjit, batch is global): ('pod', 'data') — the default.
+    DPSGD training (under vmap over learners with spmd_axis_name): () — the
+    learner axis is handled by vmap itself and the per-learner batch is
+    unsharded."""
+    return getattr(_CTX, "batch_axes", DATA_AXES)
+
+
+@contextlib.contextmanager
+def activation_batch_axes(axes):
+    prev = getattr(_CTX, "batch_axes", DATA_AXES)
+    _CTX.batch_axes = tuple(axes)
+    try:
+        yield
+    finally:
+        _CTX.batch_axes = prev
+
+
+def residual_hint(x):
+    """Constrain a (B, S, d) residual-stream activation: batch over the
+    context's batch axes, S and d replicated over `model` — forces XLA's
+    SPMD propagation into the Megatron pattern (one (B,S,d) all-reduce per
+    row-parallel matmul instead of two (B,S,ff) ones; see EXPERIMENTS H2)."""
+    return hint(x, batch_axes(), *([None] * (x.ndim - 1)))
+
+
+def has_axis(name: str) -> bool:
+    return name in mesh_axes()
+
+
+def axis_size(name: str) -> int:
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        return dict(zip(am.axis_names, am.axis_sizes))[name]
+    except Exception:
+        return 1
+
+
+DATA_AXES = ("pod", "data")

@@ -1,0 +1,309 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM + sLSTM.
+
+TPU adaptation:
+  * mLSTM — the matrix-memory recurrence C_t = f_t C_{t-1} + i_t v_t k_t^T is
+    evaluated in the *chunkwise-parallel* form (intra-chunk quadratic
+    attention with a stabilized log-space decay matrix, inter-chunk sequential
+    state passing).  This is MXU-friendly and needs no per-step state storage.
+  * sLSTM — genuinely sequential (recurrent weights R act on h_{t-1});
+    implemented as lax.scan over time with rematerialized chunks.  It is the
+    one layer type that cannot be parallelized over sequence — noted in
+    DESIGN.md; it is cheap (d_model=1024).
+
+Both use exponential gating with the m-stabilizer from the paper.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rms_norm
+
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm_params(key, d_model: int, n_heads: int, dtype, expand: int = 2):
+    di = expand * d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.zeros((d_model,), jnp.float32),
+        "up": dense_init(ks[0], d_model, 2 * di, dtype),     # x and gate z
+        "conv_w": (jax.random.normal(ks[1], (4, di)) / 2.0).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "wq": dense_init(ks[2], di, di, dtype),
+        "wk": dense_init(ks[3], di, di, dtype),
+        "wv": dense_init(ks[4], di, di, dtype),
+        "w_igate": dense_init(ks[5], di, n_heads, jnp.float32, scale=0.01),
+        "w_fgate": dense_init(ks[6], di, n_heads, jnp.float32, scale=0.01),
+        "fgate_b": jnp.full((n_heads,), 3.0, jnp.float32),   # open forget gates
+        "head_norm": jnp.zeros((di,), jnp.float32),
+        "down": dense_init(ks[7], di, d_model, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """depthwise causal conv, kernel size w.shape[0]; x: (B, S, d)."""
+    K = w.shape[0]
+    B, S, d = x.shape
+    pad = jnp.zeros((B, K - 1, d), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + S] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def mlstm_chunkwise(q, k, v, igate, fgate, chunk: int, state=None,
+                    return_state: bool = False):
+    """q,k,v: (B,S,H,dh); igate,fgate: (B,S,H) raw logits.  Stabilized
+    chunkwise-parallel evaluation of the mLSTM recurrence."""
+    B, S, H, dh = q.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+    scale = dh ** -0.5
+
+    def split(x):
+        return x.reshape(B, nc, c, *x.shape[2:]).transpose(1, 0, *range(2, x.ndim + 1))
+    qs, ks_, vs = split(q * scale), split(k), split(v)
+    ig, fg = split(igate), split(fgate)          # (nc, B, c, H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), 0.0, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    @jax.checkpoint
+    def one_chunk(carry, inp):
+        C, n, m_run = carry
+        qb, kb, vb, ib, fb = inp                  # (B,c,H,dh) / (B,c,H)
+        logf = jax.nn.log_sigmoid(fb.astype(jnp.float32))        # (B,c,H)
+        cum = jnp.cumsum(logf, axis=1)                           # inclusive
+        # Dlog[t,s] = cum_t - cum_s + i_s   (valid for s <= t)
+        dlog = (cum[:, :, None] - cum[:, None, :]
+                + ib.astype(jnp.float32)[:, None, :])            # (B,c,c,H)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        dlog = jnp.where(tri[None, :, :, None], dlog, NEG)
+        m_intra = jnp.max(dlog, axis=2)                          # (B,c,H)
+        m_inter = m_run[:, None] + cum                           # (B,c,H)
+        m_t = jnp.maximum(m_intra, m_inter)
+        d_mat = jnp.exp(dlog - m_t[:, :, None])                  # (B,c,c,H)
+        inter_scale = jnp.exp(m_inter - m_t)                     # (B,c,H)
+
+        qf = qb.astype(jnp.float32)
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+        scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * d_mat
+        num = (jnp.einsum("btsh,bshd->bthd", scores, vf)
+               + inter_scale[..., None] * jnp.einsum("bthd,bhde->bthe", qf, C))
+        # n_t = inter_scale * n_prev + sum_s D_ts k_s ;  denom = |q . n_t|
+        n_t = (jnp.einsum("btsh,bshd->bthd", d_mat, kf)
+               + inter_scale[..., None] * n[:, None])
+        denom = jnp.abs(jnp.einsum("bthd,bthd->bth", qf, n_t))
+        h = num / jnp.maximum(denom, jnp.exp(-m_t))[..., None]   # (B,c,H,dh)
+
+        # chunk-end state
+        last_cum = cum[:, -1]                                    # (B,H)
+        u = last_cum[:, None] - cum + ib.astype(jnp.float32)     # (B,c,H)
+        m_new = jnp.maximum(m_run + last_cum, jnp.max(u, axis=1))
+        sc_old = jnp.exp(m_run + last_cum - m_new)               # (B,H)
+        sc_in = jnp.exp(u - m_new[:, None])                      # (B,c,H)
+        C_new = (sc_old[..., None, None] * C
+                 + jnp.einsum("bsh,bshd,bshe->bhde", sc_in, kf, vf))
+        n_new = (sc_old[..., None] * n
+                 + jnp.einsum("bsh,bshd->bhd", sc_in, kf))
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(one_chunk, (C0, n0, m0), (qs, ks_, vs, ig, fg))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh).astype(q.dtype)
+    if return_state:
+        return h, {"C": C, "n": n, "m": m}
+    return h
+
+
+def mlstm_block_forward(params, x, *, n_heads: int, expand: int = 2,
+                        chunk: int = 64, norm_eps: float = 1e-6):
+    """Full mLSTM residual block.  x: (B, S, d)."""
+    B, S, d = x.shape
+    di = expand * d
+    dh = di // n_heads
+    h = rms_norm(x, params["norm"], norm_eps)
+    up = h @ params["up"]
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc = _causal_conv(xi, params["conv_w"], params["conv_b"])
+    q = (xc @ params["wq"]).reshape(B, S, n_heads, dh)
+    k = (xc @ params["wk"]).reshape(B, S, n_heads, dh)
+    v = (xi @ params["wv"]).reshape(B, S, n_heads, dh)
+    ig = xc.astype(jnp.float32) @ params["w_igate"]
+    fg = xc.astype(jnp.float32) @ params["w_fgate"] + params["fgate_b"]
+    o = mlstm_chunkwise(q, k, v, ig, fg, chunk).reshape(B, S, di)
+    o = rms_norm(o, params["head_norm"], norm_eps)
+    o = o * jax.nn.silu(z)
+    return x + o @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm_params(key, d_model: int, n_heads: int, dtype,
+                      ff_factor: float = 4.0 / 3.0):
+    dh = d_model // n_heads
+    dff = int(2 * ff_factor * d_model)
+    ks = jax.random.split(key, 5)
+    return {
+        "norm": jnp.zeros((d_model,), jnp.float32),
+        "w": dense_init(ks[0], d_model, 4 * d_model, dtype),   # z i f o
+        "r": (jax.random.normal(ks[1], (n_heads, dh, 4 * dh))
+              / math.sqrt(dh)).astype(dtype),
+        "b": jnp.concatenate([jnp.zeros((2 * d_model,)),
+                              jnp.full((d_model,), 3.0),
+                              jnp.zeros((d_model,))]).astype(jnp.float32),
+        "head_norm": jnp.zeros((d_model,), jnp.float32),
+        "up": dense_init(ks[2], d_model, 2 * dff, dtype),
+        "down": dense_init(ks[3], dff, d_model, dtype),
+    }
+
+
+def slstm_scan(wx, r, h0, c0, n0, m0, n_heads: int, chunk: int = 64):
+    """wx: (B, S, 4d) precomputed input contributions.  Sequential scan."""
+    B, S, d4 = wx.shape
+    d = d4 // 4
+    dh = d // n_heads
+    c_ = min(chunk, S)
+    nc = S // c_
+    wxc = wx.reshape(B, nc, c_, d4).transpose(1, 0, 2, 3)
+
+    @jax.checkpoint
+    def one_chunk(carry, xs):
+        def step(carry, wxt):
+            h, c, n, m = carry                     # h: (B, H, dh) etc.
+            rec = jnp.einsum("bhd,hde->bhe", h, r.astype(jnp.float32))
+            pre = wxt.reshape(B, n_heads, 4 * dh).astype(jnp.float32) + rec
+            z, i, f, o = jnp.split(pre, 4, axis=-1)
+            z = jnp.tanh(z)
+            o = jax.nn.sigmoid(o)
+            m_new = jnp.maximum(f + m, i)
+            fp = jnp.exp(f + m - m_new)
+            ip = jnp.exp(i - m_new)
+            c_new = fp * c + ip * z
+            n_new = fp * n + ip
+            h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+            return (h_new, c_new, n_new, m_new), h_new
+        return jax.lax.scan(step, carry, xs.transpose(1, 0, 2))
+
+    carry = (h0, c0, n0, m0)
+    carry, hs = jax.lax.scan(one_chunk, carry, wxc)
+    # hs: (nc, c, B, H, dh) -> (B, S, d)
+    hs = hs.transpose(2, 0, 1, 3, 4).reshape(B, S, d)
+    return hs, carry
+
+
+def slstm_block_forward(params, x, *, n_heads: int, chunk: int = 64,
+                        norm_eps: float = 1e-6):
+    B, S, d = x.shape
+    dh = d // n_heads
+    h = rms_norm(x, params["norm"], norm_eps)
+    wx = h @ params["w"] + params["b"]
+    # regroup (z|i|f|o per model-dim) into per-head interleave
+    wx = wx.reshape(B, S, 4, n_heads, dh).transpose(0, 1, 3, 2, 4) \
+           .reshape(B, S, 4 * d)
+    z0 = jnp.zeros((B, n_heads, dh), jnp.float32)
+    m0 = jnp.full((B, n_heads, dh), 0.0, jnp.float32)
+    hs, _ = slstm_scan(wx, params["r"], z0, z0, z0, m0, n_heads, chunk)
+    hs = rms_norm(hs.astype(x.dtype), params["head_norm"], norm_eps)
+    out = x + hs
+    # gated FF (factor 4/3 GLU) — part of the sLSTM block per the paper
+    ff = rms_norm(out, params["norm"] * 0, norm_eps) @ params["up"]
+    a, b = jnp.split(ff, 2, axis=-1)
+    return out + (jax.nn.silu(a) * b) @ params["down"]
+
+
+# ---------------------------------------------------------------------------
+# decode (single step)
+# ---------------------------------------------------------------------------
+
+def init_mlstm_cache(batch: int, d_model: int, n_heads: int, expand: int = 2,
+                     dtype=jnp.float32):
+    di = expand * d_model
+    dh = di // n_heads
+    return {"C": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+            "m": jnp.zeros((batch, n_heads), jnp.float32),
+            "conv": jnp.zeros((batch, 3, di), dtype)}
+
+
+def mlstm_block_decode(params, cache, x, *, n_heads: int, expand: int = 2,
+                       norm_eps: float = 1e-6):
+    B, _, d = x.shape
+    di = expand * d
+    dh = di // n_heads
+    h = rms_norm(x, params["norm"], norm_eps)
+    up = h @ params["up"]
+    xi, z = jnp.split(up, 2, axis=-1)                  # (B,1,di)
+    hist = jnp.concatenate([cache["conv"], xi[:, 0:1].astype(cache["conv"].dtype)],
+                           axis=1)                      # (B,4,di)
+    xc = jnp.einsum("bcd,cd->bd", hist, params["conv_w"])[:, None]
+    xc = jax.nn.silu(xc + params["conv_b"])
+    q = (xc @ params["wq"]).reshape(B, n_heads, dh) * dh ** -0.5
+    k = (xc @ params["wk"]).reshape(B, n_heads, dh)
+    v = (xi @ params["wv"]).reshape(B, n_heads, dh)
+    ig = (xc.astype(jnp.float32) @ params["w_igate"])[:, 0]
+    fg = (xc.astype(jnp.float32) @ params["w_fgate"])[:, 0] + params["fgate_b"]
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + cache["m"], ig)
+    fp = jnp.exp(logf + cache["m"] - m_new)
+    ip = jnp.exp(ig - m_new)
+    kf = k.astype(jnp.float32)
+    C = fp[..., None, None] * cache["C"] + ip[..., None, None] \
+        * jnp.einsum("bhd,bhe->bhde", kf, v.astype(jnp.float32))
+    n = fp[..., None] * cache["n"] + ip[..., None] * kf
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, C)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n))
+    hval = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    o = hval.reshape(B, 1, di).astype(x.dtype)
+    o = rms_norm(o, params["head_norm"], norm_eps)
+    o = o * jax.nn.silu(z)
+    out = x + o @ params["down"]
+    return out, {"C": C, "n": n, "m": m_new, "conv": hist[:, 1:]}
+
+
+def init_slstm_cache(batch: int, d_model: int, n_heads: int):
+    dh = d_model // n_heads
+    z = jnp.zeros((batch, n_heads, dh), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": z}
+
+
+def slstm_block_decode(params, cache, x, *, n_heads: int,
+                       norm_eps: float = 1e-6):
+    B, _, d = x.shape
+    dh = d // n_heads
+    h = rms_norm(x, params["norm"], norm_eps)
+    wx = (h @ params["w"] + params["b"])
+    wx = wx.reshape(B, 1, 4, n_heads, dh).transpose(0, 1, 3, 2, 4) \
+           .reshape(B, n_heads, 4 * dh)[:, :, :]
+    rec = jnp.einsum("bhd,hde->bhe", cache["h"], params["r"].astype(jnp.float32))
+    pre = wx.astype(jnp.float32) + rec
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    m_new = jnp.maximum(f + cache["m"], i)
+    fp = jnp.exp(f + cache["m"] - m_new)
+    ip = jnp.exp(i - m_new)
+    c_new = fp * cache["c"] + ip * z
+    n_new = fp * cache["n"] + ip
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    hs = rms_norm(h_new.reshape(B, 1, d).astype(x.dtype),
+                  params["head_norm"], norm_eps)
+    out = x + hs
+    ff = rms_norm(out, params["norm"] * 0, norm_eps) @ params["up"]
+    a, b = jnp.split(ff, 2, axis=-1)
+    out = out + (jax.nn.silu(a) * b) @ params["down"]
+    return out, {"h": h_new, "c": c_new, "n": n_new, "m": m_new}

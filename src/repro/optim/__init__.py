@@ -1,0 +1,21 @@
+"""Pure-JAX optimizers (optax-style (init, update) pairs, built from scratch).
+
+An optimizer is a pair of functions:
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    new_params = apply_updates(params, updates)   # params + updates
+
+`updates` already includes the (negative) learning-rate scaling, so
+apply_updates is a plain tree add.  All of them are learner-axis agnostic:
+stacking a leading learner dim on every leaf just works.
+"""
+from .base import Optimizer, apply_updates, scale_by_schedule
+from .sgd import sgd
+from .adam import adam
+from .lamb import lamb
+from .schedules import (constant_schedule, linear_warmup, step_decay,
+                        warmup_linear_scale)
+
+__all__ = ["Optimizer", "apply_updates", "sgd", "adam", "lamb",
+           "constant_schedule", "linear_warmup", "step_decay",
+           "warmup_linear_scale", "scale_by_schedule"]

@@ -1,0 +1,36 @@
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params, updates)
+
+
+def scale_by_schedule(opt: Optimizer, schedule) -> Optimizer:
+    """Wrap an optimizer so its lr is multiplied by schedule(step).
+
+    State grows a step counter.
+    """
+    def init(params):
+        return {"inner": opt.init(params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        scale = schedule(state["step"])
+        upd, inner = opt.update(grads, state["inner"], params)
+        upd = jax.tree_util.tree_map(lambda u: scale * u, upd)
+        return upd, {"inner": inner, "step": state["step"] + 1}
+
+    return Optimizer(init, update)

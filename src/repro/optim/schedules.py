@@ -1,0 +1,42 @@
+"""Learning-rate schedules used by the paper's recipes."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(value: float = 1.0):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup(warmup_steps: int, peak: float = 1.0, base: float = 0.0):
+    def f(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        frac = jnp.minimum(s / max(warmup_steps, 1), 1.0)
+        return base + (peak - base) * frac
+    return f
+
+
+def step_decay(boundaries, values):
+    """Piecewise-constant: the paper's CIFAR schedule (0.1 / 0.01 / 0.001)."""
+    bs = jnp.asarray(boundaries)
+    vs = jnp.asarray(values, jnp.float32)
+
+    def f(step):
+        idx = jnp.sum(step >= bs)
+        return vs[idx]
+    return f
+
+
+def warmup_linear_scale(warmup_steps: int, scale: float,
+                        anneal_boundaries=(), anneal_factor: float = 0.1):
+    """Goyal et al. large-batch recipe: warm up from 1x to `scale`x over
+    warmup_steps, then multiply by anneal_factor at each boundary."""
+    bs = jnp.asarray(anneal_boundaries) if len(anneal_boundaries) else None
+
+    def f(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = 1.0 + (scale - 1.0) * jnp.minimum(s / max(warmup_steps, 1), 1.0)
+        if bs is not None:
+            warm = warm * anneal_factor ** jnp.sum(step >= bs)
+        return warm
+    return f

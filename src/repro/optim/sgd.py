@@ -1,0 +1,35 @@
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer
+
+
+def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False,
+        weight_decay: float = 0.0) -> Optimizer:
+    """SGD with (optional) heavy-ball momentum — the paper's optimizer."""
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return {"mu": jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)}
+
+    def update(grads, state, params):
+        if weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        if momentum == 0.0:
+            upd = jax.tree_util.tree_map(lambda g: -lr * g, grads)
+            return upd, state
+        mu = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state["mu"], grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda m, g: -lr * (momentum * m + g.astype(jnp.float32)), mu, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -lr * m, mu)
+        return upd, {"mu": mu}
+
+    return Optimizer(init, update)

@@ -1,0 +1,6 @@
+import os
+
+# tests must see exactly ONE device (the dry-run forces 512 in its own
+# process); make sure nothing leaks in from the environment.
+os.environ.pop("XLA_FLAGS", None)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,82 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (attn_decode, attn_forward,
+                                    chunked_attention, init_attn_cache,
+                                    init_attn_params)
+from repro.kernels.ref import flash_attention_ref
+
+
+def _qkv(key, B=2, S=64, H=4, KV=2, hd=16):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("kw", [dict(causal=True), dict(causal=False),
+                                dict(causal=True, window=16),
+                                dict(causal=True, attn_softcap=30.0)])
+@pytest.mark.parametrize("chunk", [16, 32, 64])
+def test_chunked_matches_dense(kw, chunk):
+    q, k, v = _qkv(jax.random.PRNGKey(0))
+    pos = jnp.arange(64)
+    out = chunked_attention(q, k, v, q_positions=pos, k_positions=pos,
+                            chunk=chunk, **kw)
+    ref = flash_attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                              v.transpose(0, 2, 1, 3), **kw)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.transpose(0, 2, 1, 3)),
+                               atol=2e-5)
+
+
+def test_decode_matches_forward():
+    """Prefill-decode consistency: token t's decode output equals the
+    training forward at position t (global attention, same params)."""
+    B, S, H, KV, hd, d = 1, 12, 4, 2, 8, 32
+    key = jax.random.PRNGKey(1)
+    params = init_attn_params(key, d, H, KV, hd, jnp.float32)
+    x = jax.random.normal(key, (B, S, d))
+    pos = jnp.arange(S)
+    rope = lambda t, p: t  # no rope: isolates cache logic
+    full = attn_forward(params, x, n_heads=H, n_kv=KV, head_dim=hd,
+                        rope_fn=rope, q_positions=pos, chunk=S)
+    cache = init_attn_cache(B, S, KV, hd, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = attn_decode(params, cache, x[:, t:t + 1], jnp.int32(t),
+                               n_heads=H, n_kv=KV, head_dim=hd, rope_fn=rope)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=1e-4)
+
+
+def test_decode_rotating_window():
+    """With a buffer smaller than the sequence, decode attends over exactly
+    the last `buf` tokens (sliding-window serving)."""
+    B, S, H, KV, hd, d, buf = 1, 20, 2, 2, 8, 16, 8
+    key = jax.random.PRNGKey(2)
+    params = init_attn_params(key, d, H, KV, hd, jnp.float32)
+    x = jax.random.normal(key, (B, S, d))
+    rope = lambda t, p: t
+    cache = init_attn_cache(B, buf, KV, hd, jnp.float32)
+    for t in range(S):
+        o_win, cache = attn_decode(params, cache, x[:, t:t + 1], jnp.int32(t),
+                                   n_heads=H, n_kv=KV, head_dim=hd,
+                                   rope_fn=rope)
+    # reference: full attention restricted to last `buf` positions
+    pos = jnp.arange(S)
+    full = attn_forward(params, x, n_heads=H, n_kv=KV, head_dim=hd,
+                        rope_fn=rope, q_positions=pos, window=buf, chunk=S)
+    np.testing.assert_allclose(np.asarray(o_win[:, 0]),
+                               np.asarray(full[:, -1]), atol=1e-4)
+
+
+def test_mqa_single_kv_head():
+    q, k, v = _qkv(jax.random.PRNGKey(3), KV=1)
+    pos = jnp.arange(64)
+    out = chunked_attention(q, k, v, q_positions=pos, k_positions=pos, chunk=32)
+    assert out.shape == q.shape and bool(jnp.isfinite(out).all())

@@ -1,0 +1,68 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.diagnostics import compute_diagnostics
+from repro.core import AlgoConfig, MultiLearnerTrainer
+from repro.optim import sgd
+
+
+def quad_loss(params, batch):
+    # L(w) = 0.5 ||w - mu_batch||^2 ; grad = w - mu
+    return 0.5 * jnp.sum((params["w"] - jnp.mean(batch["x"], 0)) ** 2)
+
+
+def test_alpha_e_equals_alpha_for_identical_weights():
+    """With all learners at the SAME weights and the same batch, g_a == g so
+    alpha_e == alpha and Delta2 == 0 (DPSGD degenerates to SSGD)."""
+    n, d = 4, 16
+    w = jax.random.normal(jax.random.PRNGKey(0), (d,))
+    params = {"w": jnp.broadcast_to(w, (n, d))}
+    x = jnp.zeros((n, 8, d))
+    stats = compute_diagnostics(quad_loss, params, {"x": x}, alpha=0.3)
+    np.testing.assert_allclose(float(stats.alpha_e), 0.3, rtol=1e-5)
+    assert float(stats.delta_2) < 1e-10
+    assert float(stats.sigma_w_sq) < 1e-12
+
+
+def test_sigma_w_matches_variance():
+    n, d = 8, 32
+    ws = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    stats = compute_diagnostics(quad_loss, {"w": ws},
+                                {"x": jnp.zeros((n, 4, d))}, alpha=1.0)
+    expected = float(jnp.sum(jnp.var(ws, axis=0)))
+    np.testing.assert_allclose(float(stats.sigma_w_sq), expected, rtol=1e-5)
+
+
+def test_delta2_zero_for_quadratic_loss():
+    """For a quadratic loss gradients are LINEAR in w, so the per-learner
+    deviations cancel in the mean: Delta2 == 0 exactly (Eq. 5 needs varying
+    curvature to be non-zero)."""
+    n, d = 4, 16
+    ws = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+    stats = compute_diagnostics(quad_loss, {"w": ws},
+                                {"x": jnp.zeros((n, 4, d))}, alpha=1.0)
+    assert float(stats.delta_2) < 1e-10
+
+
+def test_delta2_positive_for_nonquadratic_loss():
+    def quartic(params, batch):
+        return 0.25 * jnp.sum(params["w"] ** 4) + 0.0 * jnp.sum(batch["x"])
+    n, d = 4, 16
+    ws = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+    stats = compute_diagnostics(quartic, {"w": ws},
+                                {"x": jnp.zeros((n, 4, d))}, alpha=1.0)
+    assert float(stats.delta_2) > 1e-4
+
+
+def test_trainer_diag_shapes():
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"]) ** 2)
+    n = 4
+    tr = MultiLearnerTrainer(loss_fn, sgd(0.01), AlgoConfig(n_learners=n),
+                             alpha_for_diag=0.01)
+    st = tr.init(jax.random.PRNGKey(0), {"w": jnp.ones((8, 2)) * 0.1})
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(1), (n, 16, 8))}
+    d = tr.diagnostics(st, batch)
+    for f in d:
+        assert jnp.ndim(f) == 0 and bool(jnp.isfinite(f))

@@ -1,0 +1,64 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dpsgd, topology as topo
+from repro.core.util import learner_mean, learner_var, tree_sub, tree_norm_sq
+
+
+def _tree(key, n):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (n, 4, 6)),
+            "b": {"c": jax.random.normal(k2, (n, 3))}}
+
+
+def test_mix_einsum_matches_matrix_math():
+    n = 6
+    t = _tree(jax.random.PRNGKey(0), n)
+    m = topo.ring_matrix(n)
+    out = dpsgd.mix_einsum(t, m)
+    ref = np.einsum("ij,jkl->ikl", np.asarray(m), np.asarray(t["a"]))
+    np.testing.assert_allclose(np.asarray(out["a"]), ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("topology", ["full", "ring", "random_pair"])
+def test_gossip_preserves_mean(topology):
+    """Paper Eq. 3: with a doubly stochastic M the average weight is
+    untouched by mixing — the learning dynamics of w_a only see gradients."""
+    n = 8
+    t = _tree(jax.random.PRNGKey(1), n)
+    m = topo.make_mixing_fn(topology, n)(jax.random.PRNGKey(2))
+    out = dpsgd.mix_einsum(t, m)
+    before, after = learner_mean(t), learner_mean(out)
+    diff = tree_norm_sq(tree_sub(before, after))
+    assert float(diff) < 1e-8
+
+
+@pytest.mark.parametrize("topology", ["full", "ring", "random_pair"])
+def test_gossip_contracts_variance(topology):
+    n = 8
+    t = _tree(jax.random.PRNGKey(3), n)
+    m = topo.make_mixing_fn(topology, n)(jax.random.PRNGKey(4))
+    out = dpsgd.mix_einsum(t, m)
+    assert float(learner_var(out)) < float(learner_var(t))
+
+
+def test_full_topology_collapses_spread():
+    n = 8
+    t = _tree(jax.random.PRNGKey(5), n)
+    out = dpsgd.mix_einsum(t, topo.full_matrix(n))
+    assert float(learner_var(out)) < 1e-10
+
+
+def test_perturb_weights_statistics():
+    t = {"w": jnp.zeros((4, 1000))}
+    noisy = dpsgd.perturb_weights(jax.random.PRNGKey(0), t, std=0.1)
+    s = float(jnp.std(noisy["w"]))
+    assert 0.08 < s < 0.12
+
+
+def test_mean_broadcast():
+    t = _tree(jax.random.PRNGKey(6), 5)
+    out = dpsgd.mean_broadcast(t)
+    assert float(learner_var(out)) == 0.0

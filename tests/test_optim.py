@@ -1,0 +1,75 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (adam, apply_updates, constant_schedule, lamb,
+                         linear_warmup, scale_by_schedule, sgd, step_decay,
+                         warmup_linear_scale)
+
+
+def test_sgd_plain():
+    opt = sgd(0.1)
+    p = {"w": jnp.ones((3,))}
+    g = {"w": jnp.full((3,), 2.0)}
+    s = opt.init(p)
+    u, s = opt.update(g, s, p)
+    np.testing.assert_allclose(np.asarray(u["w"]), -0.2, rtol=1e-6)
+
+
+def test_sgd_momentum_accumulates():
+    opt = sgd(1.0, momentum=0.5)
+    p = {"w": jnp.zeros((1,))}
+    g = {"w": jnp.ones((1,))}
+    s = opt.init(p)
+    u1, s = opt.update(g, s, p)   # mu=1      -> u=-1
+    u2, s = opt.update(g, s, p)   # mu=1.5    -> u=-1.5
+    assert float(u1["w"][0]) == -1.0
+    assert float(u2["w"][0]) == -1.5
+
+
+def test_adam_first_step_is_lr_sized():
+    opt = adam(0.01)
+    p = {"w": jnp.zeros((4,))}
+    g = {"w": jnp.array([1.0, -1.0, 10.0, -0.1])}
+    s = opt.init(p)
+    u, s = opt.update(g, s, p)
+    np.testing.assert_allclose(np.abs(np.asarray(u["w"])), 0.01, rtol=1e-3)
+
+
+def test_lamb_trust_ratio_scales():
+    opt = lamb(0.1, weight_decay=0.0)
+    p = {"w": jnp.full((4,), 10.0)}     # big weights -> big trust ratio
+    g = {"w": jnp.full((4,), 1.0)}
+    s = opt.init(p)
+    u, _ = opt.update(g, s, p)
+    # trust = ||p|| / ||adam_step|| = 20 / 2 = 10 -> update = -0.1*10*1
+    np.testing.assert_allclose(np.asarray(u["w"]), -1.0, rtol=1e-2)
+
+
+def test_apply_updates():
+    p = {"w": jnp.ones((2,))}
+    out = apply_updates(p, {"w": jnp.full((2,), 0.5)})
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.5)
+
+
+def test_schedules():
+    s = linear_warmup(10, peak=1.0)
+    assert float(s(jnp.int32(0))) == 0.0
+    assert float(s(jnp.int32(10))) == 1.0
+    d = step_decay([5, 10], [1.0, 0.1, 0.01])
+    assert abs(float(d(jnp.int32(0))) - 1.0) < 1e-6
+    assert abs(float(d(jnp.int32(7))) - 0.1) < 1e-6
+    assert abs(float(d(jnp.int32(20))) - 0.01) < 1e-6
+    w = warmup_linear_scale(4, 8.0, anneal_boundaries=(100,))
+    assert float(w(jnp.int32(0))) == 1.0
+    assert float(w(jnp.int32(4))) == 8.0
+    assert abs(float(w(jnp.int32(200))) - 0.8) < 1e-6
+
+
+def test_scale_by_schedule_composes():
+    opt = scale_by_schedule(sgd(1.0), constant_schedule(0.5))
+    p = {"w": jnp.zeros((1,))}
+    s = opt.init(p)
+    u, s = opt.update({"w": jnp.ones((1,))}, s, p)
+    assert float(u["w"][0]) == -0.5
+    assert int(s["step"]) == 1

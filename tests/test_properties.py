@@ -1,0 +1,111 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dpsgd, topology as topo
+from repro.core.util import learner_mean, learner_var, tree_norm_sq, tree_sub
+from repro.models.layers import apply_rope, cross_entropy, rms_norm, softcap
+
+
+@given(st.integers(2, 16), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_any_mixing_matrix_preserves_mean(n, seed):
+    key = jax.random.PRNGKey(seed)
+    t = {"w": jax.random.normal(key, (n, 5, 3))}
+    for name in ("full", "ring", "random_pair"):
+        m = topo.make_mixing_fn(name, n)(key)
+        out = dpsgd.mix_einsum(t, m)
+        d = tree_norm_sq(tree_sub(learner_mean(t), learner_mean(out)))
+        assert float(d) < 1e-7
+
+
+@given(st.integers(2, 12), st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_variance_never_increases_under_gossip(n, seed):
+    key = jax.random.PRNGKey(seed)
+    t = {"w": jax.random.normal(key, (n, 17))}
+    for name in ("full", "ring", "random_pair"):
+        m = topo.make_mixing_fn(name, n)(key)
+        out = dpsgd.mix_einsum(t, m)
+        assert float(learner_var(out)) <= float(learner_var(t)) + 1e-9
+
+
+@given(st.integers(1, 64), st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_rope_preserves_pairwise_norm(pos, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 1, 2, 32))
+    y = apply_rope(x, jnp.array([pos]), theta=1e4)
+    np.testing.assert_allclose(float(jnp.linalg.norm(x)),
+                               float(jnp.linalg.norm(y)), rtol=1e-5)
+
+
+@given(st.integers(2, 100))
+@settings(max_examples=20, deadline=None)
+def test_cross_entropy_uniform_is_log_v(v):
+    logits = jnp.zeros((3, 4, v))
+    labels = jnp.zeros((3, 4), jnp.int32)
+    ce = cross_entropy(logits, labels)
+    np.testing.assert_allclose(float(ce), float(jnp.log(v)), rtol=1e-5)
+
+
+@given(st.floats(1.0, 100.0), st.floats(-500.0, 500.0))
+@settings(max_examples=50, deadline=None)
+def test_softcap_bounds(cap, x):
+    y = float(softcap(jnp.float32(x), cap))
+    assert abs(y) <= cap * 1.0001
+    if abs(x) > 1e-3:  # sign preserved away from 0 (f32 rounding at 0)
+        assert (y >= 0) == (x >= 0)
+
+
+@given(st.integers(1, 8), st.integers(2, 64), st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_rms_norm_scale_invariance(b, d, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (b, d)) + 0.1
+    s = jnp.zeros((d,))
+    y1 = rms_norm(x, s)
+    y2 = rms_norm(3.0 * x, s)
+    # eps=1e-6 breaks exact invariance for small-norm draws -> loose atol
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-3)
+
+
+@given(st.integers(2, 10), st.integers(0, 1000), st.floats(0.01, 0.2))
+@settings(max_examples=15, deadline=None)
+def test_ssgd_replicas_stay_identical(n, seed, lr):
+    """SSGD invariant: all learner copies remain bitwise-identical forever."""
+    from repro.core import AlgoConfig, MultiLearnerTrainer
+    from repro.optim import sgd
+
+    def loss_fn(p, b):
+        return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2)
+
+    key = jax.random.PRNGKey(seed)
+    tr = MultiLearnerTrainer(loss_fn, sgd(lr, momentum=0.9),
+                             AlgoConfig(algo="ssgd", n_learners=n))
+    st_ = tr.init(key, {"w": jax.random.normal(key, (4, 1)) * 0.1})
+    batch = {"x": jax.random.normal(key, (n, 8, 4)),
+             "y": jnp.ones((n, 8, 1))}
+    for _ in range(3):
+        st_, _ = tr.train_step(st_, batch)
+    assert float(learner_var(st_.params)) < 1e-12
+
+
+@given(st.integers(4, 16), st.integers(0, 500))
+@settings(max_examples=10, deadline=None)
+def test_repeated_gossip_converges_to_consensus(n, seed):
+    """Gossip mixing is a consensus protocol: k rounds contract the weight
+    spread by ~(1 - spectral_gap)^k; after many rounds all learners agree
+    on the initial mean (the fixed point of Eq. 3 with zero gradients)."""
+    key = jax.random.PRNGKey(seed)
+    t = {"w": jax.random.normal(key, (n, 9))}
+    mean0 = learner_mean(t)
+    m = topo.ring_matrix(n)
+    gap = topo.spectral_gap(m)
+    var0 = float(learner_var(t))
+    for _ in range(60):
+        t = dpsgd.mix_einsum(t, m)
+    # consensus reached at (at least) the spectral-gap rate
+    assert float(learner_var(t)) <= var0 * (1 - gap) ** 40 + 1e-8
+    d = tree_norm_sq(tree_sub(learner_mean(t), mean0))
+    assert float(d) < 1e-7

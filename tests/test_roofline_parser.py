@@ -1,0 +1,43 @@
+from repro.launch.roofline import (Roofline, parse_collectives, _shape_bytes)
+
+HLO = """
+HloModule test
+
+%region_body.1 (arg: f32[16,1024]) -> f32[16,1024] {
+  %ar = f32[16,1024]{1,0} all-reduce(f32[16,1024]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %t = f32[16,1024]{1,0} add(%ar, %ar)
+}
+
+ENTRY %main (p0: f32[32,512]) -> f32[32,512] {
+  %ag = f32[32,512]{1,0} all-gather(f32[8,512]{1,0} %p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = f32[32,512]{1,0} collective-permute(f32[32,512]{1,0} %ag), source_target_pairs={{0,1},{1,0}}
+  ROOT %w = f32[32,512]{1,0} while(%cp), body=%region_body.1, condition=%cond
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,1024]") == 16 * 1024 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("pred[4,4]") == 16
+
+
+def test_parse_collectives_trip_count():
+    colls = parse_collectives(HLO, body_trip_count=12)
+    kinds = {c["kind"]: c for c in colls}
+    # all-reduce inside the while body gets x12
+    ar = kinds["all-reduce"]
+    assert ar["in_loop_body"] and ar["trip_mult"] == 12
+    assert ar["link_bytes"] == 2 * 16 * 1024 * 4 * (3 / 4) * 12
+    ag = kinds["all-gather"]
+    assert not ag["in_loop_body"]
+    assert ag["link_bytes"] == 32 * 512 * 4 * (3 / 4)
+    cp = kinds["collective-permute"]
+    assert cp["link_bytes"] == 32 * 512 * 4
+
+
+def test_roofline_bottleneck():
+    r = Roofline(flops=1e12, hbm_bytes=1e9, link_bytes=1e9, collectives=[])
+    assert r.bottleneck == "collective"  # 1e9/50e9 > 1e9/819e9 > 1e12/197e12
+    r2 = Roofline(flops=1e15, hbm_bytes=1e9, link_bytes=1e9, collectives=[])
+    assert r2.bottleneck == "compute"

@@ -1,0 +1,49 @@
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import leaf_spec
+
+
+class _K:
+    def __init__(self, k):
+        self.key = k
+
+
+def _spec(path_names, shape, model=16, learner=None):
+    path = tuple(_K(n) for n in path_names)
+    leaf = jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+    return leaf_spec(path, leaf, model, learner_axes=learner)
+
+
+def test_megatron_pairs():
+    # column-parallel in, row-parallel out: only ONE all-reduce per block
+    assert _spec(("mlp", "w1"), (1024, 4096)) == P(None, "model")
+    assert _spec(("mlp", "w2"), (4096, 1024)) == P("model", None)
+    assert _spec(("mixer", "wq"), (1024, 2048)) == P(None, "model")
+    assert _spec(("mixer", "wo"), (2048, 1024)) == P("model", None)
+
+
+def test_norms_replicated():
+    assert _spec(("norm1",), (1024,)) == P(None)
+
+
+def test_expert_parallel_when_divisible():
+    assert _spec(("mlp", "w1"), (128, 4096, 1536)) == P("model", None, None)
+    # 40 experts % 16 != 0 -> shard the ff dim instead
+    assert _spec(("mlp", "w1"), (40, 1536, 512)) == P(None, None, "model")
+    assert _spec(("mlp", "w2"), (40, 512, 1536)) == P(None, "model", None)
+
+
+def test_learner_axis_prepended():
+    s = _spec(("mlp", "w1"), (16, 1024, 4096), learner=("pod", "data"))
+    assert s == P(("pod", "data"), None, "model")
+
+
+def test_indivisible_replicates():
+    assert _spec(("mixer", "wk"), (100, 6), model=16) == P(None, None)
+
+
+def test_vocab_sharding():
+    assert _spec(("embed",), (256256, 4096)) == P("model", None)

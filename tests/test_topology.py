@@ -1,0 +1,49 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology as topo
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 8, 16])
+def test_full_ring_torus_doubly_stochastic(n):
+    assert topo.is_doubly_stochastic(topo.full_matrix(n))
+    assert topo.is_doubly_stochastic(topo.ring_matrix(n))
+    r = int(np.sqrt(n))
+    while n % r:
+        r -= 1
+    assert topo.is_doubly_stochastic(topo.torus_matrix(r, n // r))
+
+
+@given(st.integers(2, 24), st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_random_pair_doubly_stochastic_and_involutive(n, seed):
+    m = topo.random_pair_matrix(jax.random.PRNGKey(seed), n)
+    assert topo.is_doubly_stochastic(m)
+    # pairing: applying the mix twice returns the pair average again (M @ M == M)
+    m = np.asarray(m, np.float64)
+    assert np.allclose(m @ m, m, atol=1e-6)
+
+
+def test_spectral_gap_ordering():
+    # full averaging mixes fastest, ring slowest, random-pair in between
+    n = 16
+    g_full = topo.spectral_gap(topo.full_matrix(n))
+    g_ring = topo.spectral_gap(topo.ring_matrix(n))
+    assert g_full > g_ring > 0
+
+
+def test_hierarchical_matrix_rows():
+    m = topo.hierarchical_matrix(4, 2)
+    assert topo.is_doubly_stochastic(m)
+
+
+def test_make_mixing_fn_shapes():
+    for name in ["full", "ring", "torus", "random_pair", "solo"]:
+        fn = topo.make_mixing_fn(name, 8)
+        m = fn(jax.random.PRNGKey(0))
+        assert m.shape == (8, 8)
+    with pytest.raises(ValueError):
+        topo.make_mixing_fn("nope", 8)
