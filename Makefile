@@ -1,0 +1,24 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export JAX_PLATFORMS ?= cpu
+
+.PHONY: test bench-smoke bench dryrun
+
+# tier-1 suite (the repo's verify command)
+test:
+	$(PYTHON) -m pytest -x -q
+
+# quick benchmark subset: one dynamics figure, the kernel microbench and the
+# straggler measurement (the new async path)
+bench-smoke:
+	$(PYTHON) -m benchmarks.fig2_effective_lr
+	$(PYTHON) -m benchmarks.bench_kernels
+	$(PYTHON) -m benchmarks.fig3_straggler
+
+# the full paper sweep (writes results/bench/*.csv)
+bench:
+	$(PYTHON) -m benchmarks.run
+
+# 512-host-device lowering sweep (no weights allocated)
+dryrun:
+	$(PYTHON) -m repro.launch.dryrun --all --mesh single

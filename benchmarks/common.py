@@ -33,8 +33,12 @@ def write_table(name: str, header, rows):
 def train_fc(algo: str, lr: float, *, n: int = 5, local_batch: int = 400,
              steps: int = 150, seed: int = 0, noise_std: float = 0.01,
              topology: str = "random_pair", diag_every: int = 0,
-             dataset=None, optimizer=None):
-    """Returns dict(losses, diags, us_per_step, trainer, state, loader)."""
+             dataset=None, optimizer=None, algo_kwargs=None):
+    """Returns dict(losses, diags, us_per_step, trainer, state, loader).
+
+    ``algo_kwargs`` are forwarded to AlgoConfig (adpsgd staleness bound /
+    straggler injection: max_staleness, slow_learner, slow_factor).
+    """
     ds = dataset or TemplateImages()
     loader = ShardedLoader(ds, n_learners=n, local_batch=local_batch,
                            seed=seed)
@@ -43,22 +47,24 @@ def train_fc(algo: str, lr: float, *, n: int = 5, local_batch: int = 400,
     tr = MultiLearnerTrainer(
         fcnet.loss_fn, optimizer or sgd(lr),
         AlgoConfig(algo=algo, topology=topology, n_learners=n,
-                   noise_std=noise_std),
+                   noise_std=noise_std, **(algo_kwargs or {})),
         alpha_for_diag=lr)
     st = tr.init(key, params)
-    losses, diags = [], []
+    losses, diags, stale_max = [], [], 0.0
     # warm-up/compile step excluded from timing
     st, m = tr.train_step(st, loader.batch(0))
     t0 = time.perf_counter()
     for i in range(1, steps):
         st, m = tr.train_step(st, loader.batch(i))
         losses.append(float(m.loss))
+        stale_max = max(stale_max, float(m.staleness_max))
         if diag_every and i % diag_every == 0:
             d = tr.diagnostics(st, loader.batch(50_000 + i))
             diags.append((i, d))
     dt = (time.perf_counter() - t0) / max(steps - 1, 1)
     return {"losses": losses, "diags": diags, "us_per_step": dt * 1e6,
-            "trainer": tr, "state": st, "loader": loader}
+            "trainer": tr, "state": st, "loader": loader,
+            "staleness_max": stale_max}
 
 
 def final_loss(losses, k: int = 10) -> float:

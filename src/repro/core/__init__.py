@@ -1,7 +1,8 @@
 """Core: the paper's contribution — decentralized multi-learner SGD with
 landscape-dependent self-adjusting effective learning rate."""
-from .dpsgd import AlgoConfig, mix_einsum, mix_ppermute_ring, mix_ppermute_pair
-from .topology import (full_matrix, ring_matrix, torus_matrix,
+from .dpsgd import (AlgoConfig, mix_einsum, mix_ppermute_ring,
+                    mix_ppermute_pair, mix_pair_gather, straggler_active_mask)
+from .topology import (full_matrix, ring_matrix, torus_matrix, pair_partners,
                        random_pair_matrix, hierarchical_matrix,
                        is_doubly_stochastic, spectral_gap, make_mixing_fn)
 from .trainer import MultiLearnerTrainer, TrainState, StepMetrics
@@ -11,6 +12,7 @@ from .util import learner_mean, learner_var
 
 __all__ = [
     "AlgoConfig", "mix_einsum", "mix_ppermute_ring", "mix_ppermute_pair",
+    "mix_pair_gather", "pair_partners", "straggler_active_mask",
     "full_matrix", "ring_matrix", "torus_matrix", "random_pair_matrix",
     "hierarchical_matrix", "is_doubly_stochastic", "spectral_gap",
     "make_mixing_fn", "MultiLearnerTrainer", "TrainState", "StepMetrics",

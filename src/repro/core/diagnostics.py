@@ -36,13 +36,18 @@ class DiagStats(NamedTuple):
     grad_norm: jnp.ndarray      # ||g|| at w_a over superbatch
     ga_norm: jnp.ndarray        # ||g_a||
     loss_at_mean: jnp.ndarray
+    consensus_dist: jnp.ndarray  # sqrt((1/n) sum_j ||w_j - w_a||^2)
+    staleness_mean: jnp.ndarray  # mean per-learner buffer age (adpsgd; else 0)
+    staleness_max: jnp.ndarray   # max per-learner buffer age (adpsgd; else 0)
 
 
 def compute_diagnostics(loss_fn: Callable, stacked_params, stacked_batch,
-                        alpha) -> DiagStats:
+                        alpha, age=None) -> DiagStats:
     """loss_fn(params, batch) -> scalar loss for ONE learner's minibatch.
 
     stacked_params: leaves (n, ...); stacked_batch: leaves (n, B, ...).
+    ``age`` is AD-PSGD's (n,) per-learner buffer age (ticks since each
+    learner last published); None for the synchronous algorithms.
     """
     w_a = learner_mean(stacked_params)
 
@@ -79,13 +84,24 @@ def compute_diagnostics(loss_fn: Callable, stacked_params, stacked_batch,
     diff = tree_sub(g_a, learner_mean(g_at_mean))
     delta_2 = alpha ** 2 * tree_norm_sq(diff)
 
+    sigma_w_sq = learner_var(stacked_params)
+    if age is None:
+        stale_mean = stale_max = jnp.zeros((), jnp.float32)
+    else:
+        stale_mean = jnp.mean(age.astype(jnp.float32))
+        stale_max = jnp.max(age).astype(jnp.float32)
+
     return DiagStats(
         alpha_e=alpha_e,
-        sigma_w_sq=learner_var(stacked_params),
+        sigma_w_sq=sigma_w_sq,
         delta_total=delta_total,
         delta_s=delta_s,
         delta_2=delta_2,
         grad_norm=jnp.sqrt(g_norm_sq),
         ga_norm=jnp.sqrt(tree_norm_sq(g_a)),
         loss_at_mean=jnp.mean(loss_mean_vals),
+        # sigma_w_sq IS the squared consensus distance (1/n) sum ||w_j - w_a||^2
+        consensus_dist=jnp.sqrt(sigma_w_sq),
+        staleness_mean=stale_mean,
+        staleness_max=stale_max,
     )

@@ -1,4 +1,5 @@
-"""Multi-learner update rules: SSGD, SSGD* and DPSGD (the paper's Eq. 1/2).
+"""Multi-learner update rules: SSGD, SSGD*, DPSGD (paper Eq. 1/2) and the
+asynchronous AD-PSGD variant (Lian et al. 2018, staleness-bounded model).
 
 All functions operate on *stacked* pytrees whose leaves carry a leading
 learner axis of size n.  Two interchangeable gossip backends:
@@ -18,6 +19,14 @@ The semantics of one DPSGD step (paper Eq. 2, "mix then descend"):
 
 SSGD (Eq. 1): g_j = grad L^{mu_j}(w_a); w_a <- w_a - alpha * mean_j g_j.
 SSGD* adds iid N(0, sigma0^2) weight noise before the gradient evaluation.
+
+AD-PSGD replaces the synchronous pairwise mix by gossip against a possibly
+*stale* published weight buffer: each learner averages with one partner's
+last-published weights instead of blocking until the partner finishes its
+step.  Staleness is bounded (``max_staleness`` ticks) and modeled with an
+explicit per-learner clock so the whole thing stays jittable; with
+``max_staleness=0`` the buffer is always fresh and AD-PSGD degenerates —
+bitwise — to synchronous pairwise DPSGD (asserted in tests).  See DESIGN §3.
 """
 from __future__ import annotations
 
@@ -32,23 +41,36 @@ from . import topology as topo
 from .util import tree_gaussian_like, learner_mean
 
 __all__ = ["AlgoConfig", "mix_einsum", "mix_ppermute_ring", "mix_ppermute_pair",
-           "perturb_weights"]
+           "perturb_weights", "pair_partners", "mix_pair_gather",
+           "straggler_active_mask"]
 
 
 @dataclasses.dataclass(frozen=True)
 class AlgoConfig:
     """How the learners talk to each other."""
-    algo: str = "dpsgd"            # dpsgd | ssgd | ssgd_star
+    algo: str = "dpsgd"            # dpsgd | ssgd | ssgd_star | adpsgd
     topology: str = "random_pair"  # full | ring | torus | random_pair | solo
     gossip_backend: str = "einsum"  # einsum | ppermute
     gossip_order: str = "mix_then_descend"  # paper Eq. 2; or descend_then_mix
     noise_std: float = 0.01        # sigma_0 for ssgd_star
     n_learners: int = 16
+    # -- adpsgd only --------------------------------------------------------
+    max_staleness: int = 0         # staleness bound tau (ticks); 0 == sync
+    slow_learner: int = -1         # index of the injected straggler (-1: none)
+    slow_factor: int = 1           # straggler finishes a step every k ticks
 
     def __post_init__(self):
-        assert self.algo in ("dpsgd", "ssgd", "ssgd_star"), self.algo
+        assert self.algo in ("dpsgd", "ssgd", "ssgd_star", "adpsgd"), self.algo
         assert self.gossip_order in ("mix_then_descend", "descend_then_mix")
         assert self.gossip_backend in ("einsum", "ppermute")
+        assert self.max_staleness >= 0, self.max_staleness
+        assert self.slow_factor >= 1, self.slow_factor
+        assert -1 <= self.slow_learner < self.n_learners, self.slow_learner
+        if self.algo == "adpsgd":
+            assert self.topology == "random_pair", \
+                "adpsgd gossips pairwise; use topology='random_pair'"
+            assert self.gossip_order == "mix_then_descend", \
+                "adpsgd only supports the paper Eq. 2 ordering"
 
 
 # ---------------------------------------------------------------------------
@@ -85,29 +107,80 @@ def mix_ppermute_ring(stacked, axis_names, self_weight: float = 1.0 / 3.0):
     return jax.tree_util.tree_map(_mix, stacked)
 
 
-def mix_ppermute_pair(stacked, axis_names, step):
+def mix_ppermute_pair(stacked, axis_names, step, remote=None):
     """Pairwise gossip: partner = index XOR (1 << (step % log2 n)) — a
     deterministic hypercube schedule whose per-step matching matches the
     paper's random-neighbor rule in expectation, with ONE collective-permute.
-    Call inside shard_map."""
+    Call inside shard_map.
+
+    ``remote`` (default: ``stacked``) is the tree the partner's contribution
+    is read from.  Synchronous pairwise DPSGD exchanges the live weights;
+    AD-PSGD passes the stale *published* buffer here so a learner never
+    blocks on a partner that is still mid-step (DESIGN §3).
+    """
     n = jax.lax.psum(1, axis_names)
     assert n & (n - 1) == 0, "pairwise ppermute gossip needs power-of-two learners"
     import math
     log_n = int(math.log2(n))
+    if remote is None:
+        remote = stacked
     # static schedule per step value is traced; build all log_n permutations and
     # select by step % log_n using lax.switch to stay jittable.
     def make_branch(bit):
         perm = [(i, i ^ (1 << bit)) for i in range(n)]
-        def _b(x):
-            other = jax.lax.ppermute(x, axis_names, perm)
+        def _b(xr):
+            x, r = xr
+            other = jax.lax.ppermute(r, axis_names, perm)
             return (0.5 * (x + other)).astype(x.dtype)
         return _b
 
     branches = [make_branch(b) for b in range(log_n)]
 
-    def _mix(x):
-        return jax.lax.switch(step % log_n, branches, x)
-    return jax.tree_util.tree_map(_mix, stacked)
+    def _mix(x, r):
+        return jax.lax.switch(step % log_n, branches, (x, r))
+    return jax.tree_util.tree_map(_mix, stacked, remote)
+
+
+# ---------------------------------------------------------------------------
+# pairwise (matching-based) gossip — shared by sync DPSGD and AD-PSGD
+# ---------------------------------------------------------------------------
+
+pair_partners = topo.pair_partners     # re-export: the matching lives with
+                                       # the other topology constructors
+
+
+def mix_pair_gather(stacked, partner, remote=None):
+    """w_i <- 0.5 * (w_i + remote[partner_i]); solo learners keep w_i.
+
+    ``remote`` defaults to ``stacked`` (synchronous pairwise DPSGD).  AD-PSGD
+    passes the stale published buffer so the partner's contribution may lag
+    its live weights by up to the staleness bound.  Solo learners (odd n, or
+    partner == self) are left bitwise untouched — critical so a stale *own*
+    buffer never bleeds into a learner's weights.
+    """
+    if remote is None:
+        remote = stacked
+
+    def _mix(x, r):
+        solo = (partner == jnp.arange(x.shape[0]))
+        mask = solo.reshape((-1,) + (1,) * (x.ndim - 1))
+        half = 0.5 * (x + r[partner])
+        return jnp.where(mask, x, half).astype(x.dtype)
+    return jax.tree_util.tree_map(_mix, stacked, remote)
+
+
+def straggler_active_mask(step, n: int, slow_learner: int, slow_factor: int):
+    """(n,) bool: which learners complete a local step this tick.
+
+    The injected straggler (``slow_learner``) takes ``slow_factor`` ticks per
+    step, so it is active only when ``step % slow_factor == 0``; everyone else
+    is active every tick.  ``slow_learner < 0`` or ``slow_factor == 1``
+    disables the injection (all active).
+    """
+    idx = jnp.arange(n)
+    if slow_learner < 0 or slow_factor == 1:
+        return jnp.ones((n,), bool)
+    return (idx != slow_learner) | (step % slow_factor == 0)
 
 
 def perturb_weights(key, params, std):

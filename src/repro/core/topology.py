@@ -19,6 +19,7 @@ __all__ = [
     "full_matrix",
     "ring_matrix",
     "torus_matrix",
+    "pair_partners",
     "random_pair_matrix",
     "hierarchical_matrix",
     "is_doubly_stochastic",
@@ -62,12 +63,12 @@ def torus_matrix(rows: int, cols: int, dtype=jnp.float32) -> jnp.ndarray:
     return jnp.asarray(m, dtype=dtype)
 
 
-def random_pair_matrix(key: jax.Array, n: int, dtype=jnp.float32) -> jnp.ndarray:
-    """Random perfect matching: each learner averages with exactly one partner.
+def pair_partners(key: jax.Array, n: int) -> jnp.ndarray:
+    """Random perfect matching as a partner-index vector.
 
-    Implemented as 0.5*(I + P) where P is a random involutive pairing
-    permutation.  For odd n one learner stays solo that step.  This is the
-    paper's "randomly pick a neighbor to exchange weights" rule.
+    partner[i] == j and partner[j] == i for each matched pair; for odd n one
+    learner stays solo that step (partner[i] == i).  This is the paper's
+    "randomly pick a neighbor to exchange weights" rule in gather form.
     Built with jnp so it can live inside a jitted train step keyed on the step.
     """
     perm = jax.random.permutation(key, n)
@@ -78,6 +79,16 @@ def random_pair_matrix(key: jax.Array, n: int, dtype=jnp.float32) -> jnp.ndarray
     partner = jnp.arange(n)
     partner = partner.at[a].set(b)
     partner = partner.at[b].set(a)
+    return partner
+
+
+def random_pair_matrix(key: jax.Array, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Random perfect matching: each learner averages with exactly one partner.
+
+    Implemented as 0.5*(I + P) where P is the involutive pairing permutation
+    from :func:`pair_partners` (matrix form of the same matching law).
+    """
+    partner = pair_partners(key, n)
     p = jnp.zeros((n, n), dtype).at[jnp.arange(n), partner].set(1.0)
     return 0.5 * (jnp.eye(n, dtype=dtype) + p)
 

@@ -1,11 +1,16 @@
-"""MultiLearnerTrainer — research-scale driver for SSGD / SSGD* / DPSGD.
+"""MultiLearnerTrainer — research driver for SSGD / SSGD* / DPSGD / AD-PSGD.
 
-Semantics (paper Sec. 2):
+Semantics (paper Sec. 2 + Lian et al. 2018 for the async variant):
   SSGD   : g_j = grad L^{mu_j}(w_a);          w_a <- w_a + opt(mean_j g_j)
   SSGD*  : g_j = grad L^{mu_j}(w_a + delta_j) with delta_j ~ N(0, sigma0^2 I)
   DPSGD  : g_j = grad L^{mu_j}(w_j);          w_j <- mix(w)_j + opt_j(g_j)
+  AD-PSGD: like DPSGD with pairwise gossip, but the partner's contribution is
+           its last *published* weights (stale by up to ``max_staleness``
+           ticks), and an injected straggler only completes a step every
+           ``slow_factor`` ticks.  Modeled with explicit per-learner
+           buffer/age/clock state so the step stays one jitted function.
 
-State always carries *stacked* params (leading learner axis n) so the three
+State always carries *stacked* params (leading learner axis n) so the
 algorithms are interchangeable and all diagnostics apply uniformly.  For SSGD
 the stacked copies stay bitwise identical (asserted in tests).
 
@@ -24,7 +29,8 @@ import jax.numpy as jnp
 
 from . import topology as topo
 from .diagnostics import DiagStats, compute_diagnostics
-from .dpsgd import AlgoConfig, mean_broadcast, mix_einsum, perturb_weights
+from .dpsgd import (AlgoConfig, mean_broadcast, mix_einsum, mix_pair_gather,
+                    pair_partners, perturb_weights, straggler_active_mask)
 from .util import learner_mean, learner_var
 from ..optim import Optimizer, apply_updates
 
@@ -34,12 +40,26 @@ class TrainState(NamedTuple):
     opt_state: Any        # stacked per-learner
     step: jnp.ndarray
     rng: jax.Array
+    # -- adpsgd only (None otherwise) --------------------------------------
+    buffer: Any = None    # last-published weights, stacked like params
+    age: Any = None       # (n,) int32 ticks since each learner published
+    clock: Any = None     # (n,) int32 completed local steps per learner
 
 
 class StepMetrics(NamedTuple):
     loss: jnp.ndarray          # mean per-learner minibatch loss
     grad_norm: jnp.ndarray     # ||g_a||
     sigma_w_sq: jnp.ndarray    # weight variance across learners
+    staleness_mean: jnp.ndarray  # mean buffer age seen at gossip (adpsgd)
+    staleness_max: jnp.ndarray   # max buffer age seen at gossip (adpsgd)
+
+
+def _select(mask, new, old):
+    """Per-learner select: leaf[j] = new[j] if mask[j] else old[j]."""
+    def _sel(a, b):
+        m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+    return jax.tree_util.tree_map(_sel, new, old)
 
 
 @dataclasses.dataclass
@@ -51,6 +71,10 @@ class MultiLearnerTrainer:
 
     def __post_init__(self):
         self._mix_fn = topo.make_mixing_fn(self.algo.topology, self.algo.n_learners)
+        if (getattr(self.optimizer, "wants_mixed", False)
+                and self.algo.gossip_order != "mix_then_descend"):
+            raise ValueError("decentlam-style optimizers need the gossip "
+                             "average: use gossip_order='mix_then_descend'")
         # jit once per trainer instance (self is not hashable -> close over it)
         self.train_step = jax.jit(self._train_step)
         self.diagnostics = jax.jit(self._diagnostics)
@@ -62,7 +86,20 @@ class MultiLearnerTrainer:
         stacked = jax.tree_util.tree_map(
             lambda p: jnp.broadcast_to(p[None], (n,) + p.shape).copy(), params_single)
         opt_state = jax.vmap(self.optimizer.init)(stacked)
-        return TrainState(stacked, opt_state, jnp.zeros((), jnp.int32), key)
+        buffer = age = clock = None
+        if self.algo.algo == "adpsgd":
+            buffer = jax.tree_util.tree_map(jnp.copy, stacked)
+            age = jnp.zeros((n,), jnp.int32)
+            clock = jnp.zeros((n,), jnp.int32)
+        return TrainState(stacked, opt_state, jnp.zeros((), jnp.int32), key,
+                          buffer=buffer, age=age, clock=clock)
+
+    # -- optimizer call (decentlam-aware) -------------------------------------
+    def _opt_update(self, grads, opt_state, params, mixed):
+        if getattr(self.optimizer, "wants_mixed", False):
+            return jax.vmap(self.optimizer.update)(grads, opt_state, params,
+                                                   mixed)
+        return jax.vmap(self.optimizer.update)(grads, opt_state, params)
 
     # -- one training step ----------------------------------------------------
     def _train_step(self, state: TrainState, stacked_batch):
@@ -72,6 +109,9 @@ class MultiLearnerTrainer:
         k_mix, k_noise = jax.random.split(key)
 
         grad_fn = jax.value_and_grad(self.loss_fn)
+        zero = jnp.zeros((), jnp.float32)
+        stale_mean, stale_max = zero, zero
+        buffer, age, clock = state.buffer, state.age, state.clock
 
         if algo.algo == "ssgd":
             w_a = learner_mean(state.params)
@@ -81,8 +121,8 @@ class MultiLearnerTrainer:
             g_stacked = jax.tree_util.tree_map(
                 lambda g: jnp.broadcast_to(g[None], (algo.n_learners,) + g.shape),
                 g_mean)
-            updates, opt_state = jax.vmap(self.optimizer.update)(
-                g_stacked, state.opt_state, state.params)
+            updates, opt_state = self._opt_update(
+                g_stacked, state.opt_state, state.params, state.params)
             new_params = apply_updates(state.params, updates)
             new_params = mean_broadcast(new_params)
 
@@ -99,22 +139,63 @@ class MultiLearnerTrainer:
             g_stacked = jax.tree_util.tree_map(
                 lambda g: jnp.broadcast_to(g[None], (algo.n_learners,) + g.shape),
                 g_mean)
-            updates, opt_state = jax.vmap(self.optimizer.update)(
-                g_stacked, state.opt_state, state.params)
+            updates, opt_state = self._opt_update(
+                g_stacked, state.opt_state, state.params, state.params)
             new_params = apply_updates(state.params, updates)
             new_params = mean_broadcast(new_params)
 
         elif algo.algo == "dpsgd":
             # gradients at LOCAL weights (the whole point of the paper)
             losses, grads = jax.vmap(grad_fn)(state.params, stacked_batch)
-            updates, opt_state = jax.vmap(self.optimizer.update)(
-                grads, state.opt_state, state.params)
-            m = self._mix_fn(k_mix)
             if algo.gossip_order == "mix_then_descend":   # paper Eq. 2
-                mixed = mix_einsum(state.params, m)
+                if algo.topology == "random_pair":
+                    # gather form of the random matching: O(P) instead of an
+                    # n x n einsum, and the reference AD-PSGD reduces to at
+                    # staleness 0 (bitwise — asserted in tests)
+                    mixed = mix_pair_gather(state.params,
+                                            pair_partners(k_mix, algo.n_learners))
+                else:
+                    mixed = mix_einsum(state.params, self._mix_fn(k_mix))
+                updates, opt_state = self._opt_update(
+                    grads, state.opt_state, state.params, mixed)
                 new_params = apply_updates(mixed, updates)
             else:                                          # descend_then_mix
-                new_params = mix_einsum(apply_updates(state.params, updates), m)
+                updates, opt_state = self._opt_update(
+                    grads, state.opt_state, state.params, state.params)
+                new_params = mix_einsum(apply_updates(state.params, updates),
+                                        self._mix_fn(k_mix))
+
+        elif algo.algo == "adpsgd":
+            # Async pairwise gossip, simulated one global tick at a time:
+            #   active  — learners that finish a local step this tick (the
+            #             injected straggler finishes every slow_factor ticks)
+            #   remote  — what partners read: the last-published buffer, or
+            #             the live weights once the staleness bound is hit
+            n = algo.n_learners
+            active = straggler_active_mask(state.step, n, algo.slow_learner,
+                                           algo.slow_factor)
+            fresh = age >= algo.max_staleness      # forced publish (bound tau)
+            remote = _select(fresh, state.params, buffer)
+            stale_seen = jnp.where(fresh, 0, age)
+            stale_mean = jnp.mean(stale_seen.astype(jnp.float32))
+            stale_max = jnp.max(stale_seen).astype(jnp.float32)
+
+            losses, grads = jax.vmap(grad_fn)(state.params, stacked_batch)
+            partner = pair_partners(k_mix, n)
+            mixed = mix_pair_gather(state.params, partner, remote)
+            updates, opt_state_new = self._opt_update(
+                grads, state.opt_state, state.params, mixed)
+            stepped = apply_updates(mixed, updates)
+
+            # inactive learners are mid-step: weights and momentum unchanged
+            new_params = _select(active, stepped, state.params)
+            opt_state = _select(active, opt_state_new, state.opt_state)
+            # publishing: completing a step publishes the new weights; a
+            # forced-fresh learner re-publishes its (unchanged) in-progress
+            # weights — both cases read off new_params
+            buffer = _select(active | fresh, new_params, buffer)
+            age = jnp.where(active | fresh, 0, age + 1)
+            clock = clock + active.astype(jnp.int32)
         else:
             raise ValueError(algo.algo)
 
@@ -124,13 +205,16 @@ class MultiLearnerTrainer:
                                    for g in jax.tree_util.tree_leaves(
                                        learner_mean(grads)))),
             sigma_w_sq=learner_var(new_params),
+            staleness_mean=stale_mean,
+            staleness_max=stale_max,
         )
-        return TrainState(new_params, opt_state, state.step + 1, state.rng), metrics
+        return TrainState(new_params, opt_state, state.step + 1, state.rng,
+                          buffer=buffer, age=age, clock=clock), metrics
 
     # -- diagnostics (paper Fig. 2b / Fig. 4) ---------------------------------
     def _diagnostics(self, state: TrainState, stacked_batch) -> DiagStats:
         return compute_diagnostics(self.loss_fn, state.params, stacked_batch,
-                                   self.alpha_for_diag)
+                                   self.alpha_for_diag, age=state.age)
 
     # -- eval ----------------------------------------------------------------
     def _eval_loss(self, state: TrainState, batch):

@@ -70,11 +70,11 @@ def build_lowered(arch: str, shape: str, *, multi_pod: bool, algo: str,
                                          gossip_backend=backend)
         else:
             step = make_ssgd_train_step(api, opt, mesh)
-        with jax.set_mesh(mesh):
+        with mesh:
             lowered = jax.jit(
                 step,
-                in_shardings=(state_shd, batch_shd),
-                out_shardings=(state_shd, None),
+                in_shardings=shd.named_shardings((state_shd, batch_shd), mesh),
+                out_shardings=shd.named_shardings((state_shd, None), mesh),
             ).lower(state_specs, batch_specs)
         n_tokens = global_batch * seq_len
         model_flops = 6.0 * cfg.n_active_params() * n_tokens
@@ -86,9 +86,10 @@ def build_lowered(arch: str, shape: str, *, multi_pod: bool, algo: str,
         batch_specs = api.train_batch_spec(global_batch, seq_len)
         batch_shd = shd.batch_sharding(batch_specs, mesh, stacked=False)
         step = make_prefill_step(api)
-        with jax.set_mesh(mesh):
+        with mesh:
             lowered = jax.jit(
-                step, in_shardings=(params_shd, batch_shd),
+                step,
+                in_shardings=shd.named_shardings((params_shd, batch_shd), mesh),
             ).lower(params_specs, batch_specs)
         model_flops = 2.0 * cfg.n_active_params() * global_batch * seq_len
         return lowered, mesh, model_flops
@@ -113,11 +114,12 @@ def build_lowered(arch: str, shape: str, *, multi_pod: bool, algo: str,
     tok_shd = shd.batch_sharding(tok_spec, mesh, stacked=False)
     pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
     step = make_decode_step(api)
-    with jax.set_mesh(mesh):
+    with mesh:
         lowered = jax.jit(
             step,
-            in_shardings=(params_shd, cache_shd, tok_shd, P()),
-            out_shardings=(None, cache_shd),
+            in_shardings=shd.named_shardings(
+                (params_shd, cache_shd, tok_shd, P()), mesh),
+            out_shardings=shd.named_shardings((None, cache_shd), mesh),
         ).lower(params_specs, cache_specs, tok_spec, pos_spec)
     model_flops = 2.0 * cfg.n_active_params() * global_batch
     return lowered, mesh, model_flops

@@ -150,3 +150,11 @@ def cache_sharding(cache_shapes, mesh):
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
     return jax.tree_util.tree_unflatten(
         treedef, [one(p, l) for p, l in flat])
+
+
+def named_shardings(spec_tree, mesh):
+    """PartitionSpec tree -> NamedSharding tree (jax.jit's in_shardings wants
+    concrete Shardings, not bare specs).  None subtrees pass through."""
+    from jax.sharding import NamedSharding
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, spec_tree)

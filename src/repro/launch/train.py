@@ -6,11 +6,15 @@ Training (the paper's setting):
     paper's point); the only cross-learner traffic is the gossip mix.
        gossip_backend='einsum'   : paper-faithful reference (L x L mixing
                                    matrix; XLA emits an all-gather over the
-                                   learner axis — O(L*P) traffic)
+                                   learner axis — O(L*P) traffic, DESIGN §2)
        gossip_backend='ppermute' : TPU-native ring gossip via shard_map +
                                    collective-permute — O(P) traffic
-                                   (beyond-paper optimization, see §Perf)
-  * SSGD   — classic data parallелism: replicated params, psum'd grads
+                                   (beyond-paper optimization, DESIGN §2)
+  * AD-PSGD — straggler-tolerant pairwise gossip against a stale published
+    weight buffer (staleness-bounded, explicit per-learner age/clock so the
+    step is one jitted SPMD program); reuses mix_ppermute_pair — ONE
+    collective-permute per step (DESIGN §3).
+  * SSGD   — classic data parallelism: replicated params, psum'd grads
     (the baseline the paper compares against).
 
 Serving: prefill (full forward) and decode (one token vs a rotating KV
@@ -26,7 +30,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..core.dpsgd import mix_einsum, mix_ppermute_ring
+try:                                      # jax >= 0.6
+    _shard_map = jax.shard_map
+except AttributeError:                    # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from ..core.dpsgd import (mix_einsum, mix_ppermute_pair, mix_ppermute_ring,
+                          straggler_active_mask)
 from ..core.topology import random_pair_matrix, ring_matrix
 from ..models.model import ModelAPI
 from ..models.shard_hints import activation_batch_axes
@@ -40,6 +50,9 @@ class PjitTrainState(NamedTuple):
     opt_state: Any
     step: jnp.ndarray
     rng: jax.Array
+    # -- adpsgd only (None otherwise) --------------------------------------
+    buffer: Any = None    # last-published weights, stacked like params
+    age: Any = None       # (L,) int32 ticks since each learner published
 
 
 # ---------------------------------------------------------------------------
@@ -66,7 +79,7 @@ def make_dpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh,
             mixed = mix_ppermute_ring(p, l_axes)
             return mixed
 
-        return jax.shard_map(local, mesh=mesh, in_specs=(specs,),
+        return _shard_map(local, mesh=mesh, in_specs=(specs,),
                              out_specs=specs)(params)
 
     def train_step(state: PjitTrainState, batch):
@@ -81,14 +94,92 @@ def make_dpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh,
                                      in_axes=(0, 0),
                                      spmd_axis_name=l_axes)(
                 state.params, stacked_batch)
-        updates, opt_state = jax.vmap(optimizer.update)(
-            grads, state.opt_state, state.params)
         key = jax.random.fold_in(state.rng, state.step)
         mixed = gossip(state.params, key)              # paper Eq. 2 ordering
+        if getattr(optimizer, "wants_mixed", False):   # decentlam correction
+            updates, opt_state = jax.vmap(optimizer.update)(
+                grads, state.opt_state, state.params, mixed)
+        else:
+            updates, opt_state = jax.vmap(optimizer.update)(
+                grads, state.opt_state, state.params)
         new_params = apply_updates(mixed, updates)
         metrics = {"loss": jnp.mean(losses)}
         return PjitTrainState(new_params, opt_state, state.step + 1,
                               state.rng), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# AD-PSGD: straggler-tolerant pairwise gossip against a stale buffer
+# ---------------------------------------------------------------------------
+
+def make_adpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh, *,
+                           max_staleness: int = 4, slow_learner: int = -1,
+                           slow_factor: int = 1) -> Callable:
+    """One asynchronous-gossip tick as an SPMD program (DESIGN §3).
+
+    Same simulation contract as the vmap research path: each learner mixes
+    its live weights with ONE partner's last-*published* weights (hypercube
+    ppermute schedule, one collective-permute), the partner's buffer may lag
+    by up to ``max_staleness`` ticks, and an injected straggler only
+    completes (and publishes) every ``slow_factor`` ticks.  With
+    ``max_staleness=0`` and no straggler this is synchronous pairwise DPSGD.
+    """
+    L = n_learners(mesh)
+    l_axes = learner_axes(mesh)
+
+    def gossip(params, buffer, age, step):
+        specs = shd.params_sharding(params, mesh, stacked=True)
+        age_spec = P(tuple(l_axes))
+
+        def local(p, buf, a):
+            fresh = a[0] >= max_staleness          # forced publish (bound)
+            remote = jax.tree_util.tree_map(
+                lambda w, b: jnp.where(fresh, w, b), p, buf)
+            return mix_ppermute_pair(p, l_axes, step, remote=remote)
+
+        return _shard_map(local, mesh=mesh,
+                             in_specs=(specs, specs, age_spec),
+                             out_specs=specs)(params, buffer, age)
+
+    def train_step(state: PjitTrainState, batch):
+        stacked_batch = jax.tree_util.tree_map(
+            lambda x: x.reshape((L, x.shape[0] // L) + x.shape[1:]), batch)
+        with activation_batch_axes(()):
+            losses, grads = jax.vmap(jax.value_and_grad(api.loss_fn),
+                                     in_axes=(0, 0),
+                                     spmd_axis_name=l_axes)(
+                state.params, stacked_batch)
+        mixed = gossip(state.params, state.buffer, state.age, state.step)
+        if getattr(optimizer, "wants_mixed", False):   # decentlam correction
+            updates, opt_state_new = jax.vmap(optimizer.update)(
+                grads, state.opt_state, state.params, mixed)
+        else:
+            updates, opt_state_new = jax.vmap(optimizer.update)(
+                grads, state.opt_state, state.params)
+        stepped = apply_updates(mixed, updates)
+
+        active = straggler_active_mask(state.step, L, slow_learner,
+                                       slow_factor)
+        fresh = state.age >= max_staleness
+
+        def sel(mask):
+            return lambda a, b: jnp.where(
+                mask.reshape((-1,) + (1,) * (a.ndim - 1)), a, b)
+        new_params = jax.tree_util.tree_map(sel(active), stepped, state.params)
+        opt_state = jax.tree_util.tree_map(sel(active), opt_state_new,
+                                           state.opt_state)
+        # active learners publish their new weights; forced-fresh inactive
+        # ones re-publish their (unchanged) in-progress weights — both read
+        # off new_params
+        buffer = jax.tree_util.tree_map(sel(active | fresh), new_params,
+                                        state.buffer)
+        age = jnp.where(active | fresh, 0, state.age + 1)
+        metrics = {"loss": jnp.mean(losses),
+                   "staleness_max": jnp.max(jnp.where(fresh, 0, state.age))}
+        return PjitTrainState(new_params, opt_state, state.step + 1,
+                              state.rng, buffer=buffer, age=age), metrics
 
     return train_step
 
@@ -138,20 +229,25 @@ def stacked_param_specs(api: ModelAPI, L: int):
 def train_state_specs(api: ModelAPI, optimizer: Optimizer, mesh, *,
                       algo: str):
     L = n_learners(mesh)
-    if algo == "dpsgd":
+    buffer = age = None
+    if algo in ("dpsgd", "adpsgd"):
         p = stacked_param_specs(api, L)
         o = jax.eval_shape(lambda q: jax.vmap(optimizer.init)(q), p)
+        if algo == "adpsgd":
+            buffer = p
+            age = jax.ShapeDtypeStruct((L,), jnp.int32)
     else:
         p = jax.eval_shape(api.init, jax.random.PRNGKey(0))
         o = jax.eval_shape(optimizer.init, p)
     return PjitTrainState(
         params=p, opt_state=o,
         step=jax.ShapeDtypeStruct((), jnp.int32),
-        rng=jax.ShapeDtypeStruct((2,), jnp.uint32))
+        rng=jax.ShapeDtypeStruct((2,), jnp.uint32),
+        buffer=buffer, age=age)
 
 
 def train_state_shardings(state_specs: PjitTrainState, mesh, *, algo: str):
-    stacked = algo == "dpsgd"
+    stacked = algo in ("dpsgd", "adpsgd")
     p = shd.params_sharding(state_specs.params, mesh, stacked=stacked)
     # optimizer state mirrors params (momentum etc.), scalars replicated
     def opt_spec(path, leaf):
@@ -164,4 +260,9 @@ def train_state_shardings(state_specs: PjitTrainState, mesh, *, algo: str):
     flat, treedef = jax.tree_util.tree_flatten_with_path(state_specs.opt_state)
     o = jax.tree_util.tree_unflatten(
         treedef, [opt_spec(pa, l) for pa, l in flat])
-    return PjitTrainState(params=p, opt_state=o, step=P(), rng=P())
+    buffer = age = None
+    if algo == "adpsgd":
+        buffer = p
+        age = P(learner_axes(mesh))
+    return PjitTrainState(params=p, opt_state=o, step=P(), rng=P(),
+                          buffer=buffer, age=age)

@@ -13,9 +13,10 @@ from .base import Optimizer, apply_updates, scale_by_schedule
 from .sgd import sgd
 from .adam import adam
 from .lamb import lamb
+from .decentlam import decentlam
 from .schedules import (constant_schedule, linear_warmup, step_decay,
                         warmup_linear_scale)
 
-__all__ = ["Optimizer", "apply_updates", "sgd", "adam", "lamb",
+__all__ = ["Optimizer", "apply_updates", "sgd", "adam", "lamb", "decentlam",
            "constant_schedule", "linear_warmup", "step_decay",
            "warmup_linear_scale", "scale_by_schedule"]

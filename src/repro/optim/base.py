@@ -11,6 +11,9 @@ import jax.numpy as jnp
 class Optimizer:
     init: Callable[[Any], Any]
     update: Callable[..., Any]  # (grads, state, params) -> (updates, state)
+    # decentralized-aware optimizers (decentlam) additionally receive the
+    # post-gossip weights: update(grads, state, params, mixed)
+    wants_mixed: bool = False
 
 
 def apply_updates(params, updates):
@@ -27,10 +30,10 @@ def scale_by_schedule(opt: Optimizer, schedule) -> Optimizer:
     def init(params):
         return {"inner": opt.init(params), "step": jnp.zeros((), jnp.int32)}
 
-    def update(grads, state, params):
+    def update(grads, state, params, *extra):
         scale = schedule(state["step"])
-        upd, inner = opt.update(grads, state["inner"], params)
+        upd, inner = opt.update(grads, state["inner"], params, *extra)
         upd = jax.tree_util.tree_map(lambda u: scale * u, upd)
         return upd, {"inner": inner, "step": state["step"] + 1}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, wants_mixed=opt.wants_mixed)

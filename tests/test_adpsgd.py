@@ -1,0 +1,246 @@
+"""AD-PSGD (async staleness-bounded gossip) + DecentLaM invariants.
+
+Covers the tentpole contracts:
+  * staleness bound 0  ==> bitwise-identical to synchronous pairwise DPSGD
+  * injected straggler ==> bounded staleness, lagging clock, still converges
+  * DecentLaM          ==> heavy-ball when gossip is off (bitwise); removes
+                           the naive-momentum fixed-point bias under gossip
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AlgoConfig, MultiLearnerTrainer
+from repro.core.dpsgd import mix_pair_gather, straggler_active_mask
+from repro.core.topology import pair_partners
+from repro.optim import decentlam, sgd
+
+
+def _quad_loss(p, b):
+    return jnp.mean((b["x"] @ p["w"] - b["y"]) ** 2) \
+        + 0.01 * jnp.sum(p["w"] ** 4)
+
+
+def _quad_batch(n, key=1):
+    return {"x": jax.random.normal(jax.random.PRNGKey(key), (n, 16, 8)),
+            "y": jax.random.normal(jax.random.PRNGKey(key + 1), (n, 16, 3))}
+
+
+def _run(cfg, opt, steps, key=0, loss_fn=_quad_loss, params=None, batch=None):
+    params = params or {"w": jax.random.normal(jax.random.PRNGKey(9),
+                                               (8, 3)) * 0.1}
+    batch = batch or _quad_batch(cfg.n_learners)
+    tr = MultiLearnerTrainer(loss_fn, opt, cfg, alpha_for_diag=0.05)
+    st = tr.init(jax.random.PRNGKey(key), params)
+    metrics = []
+    for _ in range(steps):
+        st, m = tr.train_step(st, batch)
+        metrics.append(m)
+    return st, metrics, tr
+
+
+# ---------------------------------------------------------------------------
+# gossip primitives
+# ---------------------------------------------------------------------------
+
+def test_pair_partners_is_involution():
+    for seed in range(5):
+        for n in (2, 5, 8, 16):
+            p = np.asarray(pair_partners(jax.random.PRNGKey(seed), n))
+            assert (p[p] == np.arange(n)).all()        # partner-of-partner
+            assert ((p != np.arange(n)).sum() >= (n // 2) * 2 - 2)
+
+
+def test_mix_pair_gather_matches_matrix():
+    """Gather form == 0.5(I+P) einsum form of the same matching."""
+    from repro.core import mix_einsum
+    from repro.core.topology import random_pair_matrix
+    n = 8
+    key = jax.random.PRNGKey(4)
+    t = {"w": jax.random.normal(jax.random.PRNGKey(5), (n, 6))}
+    out_g = mix_pair_gather(t, pair_partners(key, n))
+    out_m = mix_einsum(t, random_pair_matrix(key, n))
+    np.testing.assert_allclose(np.asarray(out_g["w"]),
+                               np.asarray(out_m["w"]), atol=1e-6)
+
+
+def test_mix_pair_gather_solo_untouched():
+    """Odd n: the unmatched learner must keep its weights bitwise, even when
+    the remote buffer differs from the live weights."""
+    n = 5
+    key = jax.random.PRNGKey(0)
+    partner = pair_partners(key, n)
+    solo = int(np.where(np.asarray(partner) == np.arange(n))[0][0])
+    t = {"w": jax.random.normal(jax.random.PRNGKey(1), (n, 4))}
+    stale = {"w": jnp.zeros_like(t["w"])}
+    out = mix_pair_gather(t, partner, remote=stale)
+    np.testing.assert_array_equal(np.asarray(out["w"][solo]),
+                                  np.asarray(t["w"][solo]))
+
+
+def test_straggler_active_mask():
+    n = 4
+    m0 = straggler_active_mask(jnp.asarray(0), n, 0, 3)
+    m1 = straggler_active_mask(jnp.asarray(1), n, 0, 3)
+    assert bool(m0[0]) and not bool(m1[0])
+    assert np.asarray(m1)[1:].all()
+    assert np.asarray(straggler_active_mask(jnp.asarray(1), n, -1, 3)).all()
+
+
+# ---------------------------------------------------------------------------
+# AD-PSGD semantics
+# ---------------------------------------------------------------------------
+
+def test_staleness_zero_matches_sync_pairwise_dpsgd_bitwise():
+    """Acceptance contract: AD-PSGD with staleness bound 0 and no straggler
+    IS synchronous pairwise DPSGD, bit for bit, optimizer state included."""
+    n, steps = 8, 12
+    sync = AlgoConfig(algo="dpsgd", topology="random_pair", n_learners=n)
+    adp = AlgoConfig(algo="adpsgd", topology="random_pair", n_learners=n,
+                     max_staleness=0)
+    opt = sgd(0.05, momentum=0.9)
+    st_s, _, _ = _run(sync, opt, steps)
+    st_a, _, _ = _run(adp, opt, steps)
+    np.testing.assert_array_equal(np.asarray(st_s.params["w"]),
+                                  np.asarray(st_a.params["w"]))
+    np.testing.assert_array_equal(np.asarray(st_s.opt_state["mu"]["w"]),
+                                  np.asarray(st_a.opt_state["mu"]["w"]))
+    assert int(jnp.max(st_a.age)) == 0
+
+
+def test_straggler_lags_clock_and_creates_bounded_staleness():
+    n, slow, tau = 8, 4, 6
+    cfg = AlgoConfig(algo="adpsgd", n_learners=n, max_staleness=tau,
+                     slow_learner=0, slow_factor=slow)
+    st, metrics, tr = _run(cfg, sgd(0.05), steps=13)
+    clock = np.asarray(st.clock)
+    # 13 ticks: straggler completed ceil(13/4)=4 steps, everyone else 13
+    assert clock[0] == 4 and (clock[1:] == 13).all()
+    stale_max = max(float(m.staleness_max) for m in metrics)
+    assert 0 < stale_max <= tau
+    # the bound holds on the state too, at every observable point
+    assert int(jnp.max(st.age)) <= tau
+
+
+def test_staleness_bound_forces_publish():
+    """tau=1: partners may never see a buffer older than 1 tick even with a
+    very slow straggler."""
+    cfg = AlgoConfig(algo="adpsgd", n_learners=4, max_staleness=1,
+                     slow_learner=0, slow_factor=10)
+    st, metrics, _ = _run(cfg, sgd(0.05), steps=20)
+    assert max(float(m.staleness_max) for m in metrics) <= 1.0
+
+
+def test_adpsgd_converges_with_straggler():
+    """Convergence parity: staleness + a 3x straggler should not destroy
+    training on the quadratic task (same order of final loss as sync)."""
+    n = 8
+    sync = AlgoConfig(algo="dpsgd", topology="random_pair", n_learners=n)
+    adp = AlgoConfig(algo="adpsgd", n_learners=n, max_staleness=4,
+                     slow_learner=0, slow_factor=3)
+    opt = sgd(0.05, momentum=0.9)
+    _, m_s, _ = _run(sync, opt, steps=150)
+    _, m_a, _ = _run(adp, opt, steps=150)
+    f_s = float(m_s[-1].loss)
+    f_a = float(m_a[-1].loss)
+    assert np.isfinite(f_a)
+    assert f_a < 2.0 * f_s + 0.05, (f_a, f_s)
+
+
+def test_adpsgd_diagnostics_report_staleness():
+    n = 4
+    cfg = AlgoConfig(algo="adpsgd", n_learners=n, max_staleness=8,
+                     slow_learner=0, slow_factor=3)
+    st, _, tr = _run(cfg, sgd(0.05), steps=5)   # tick 5: straggler age == 2
+    d = tr.diagnostics(st, _quad_batch(n))
+    assert float(d.staleness_max) == float(jnp.max(st.age))
+    assert float(d.staleness_mean) == float(jnp.mean(st.age.astype(jnp.float32)))
+    np.testing.assert_allclose(float(d.consensus_dist),
+                               float(jnp.sqrt(d.sigma_w_sq)), rtol=1e-6)
+
+
+def test_adpsgd_config_validation():
+    with pytest.raises(AssertionError):
+        AlgoConfig(algo="adpsgd", topology="ring")
+    with pytest.raises(AssertionError):
+        AlgoConfig(algo="adpsgd", max_staleness=-1)
+    with pytest.raises(AssertionError):
+        AlgoConfig(algo="adpsgd", slow_learner=99, n_learners=4)
+
+
+# ---------------------------------------------------------------------------
+# DecentLaM
+# ---------------------------------------------------------------------------
+
+def test_decentlam_equals_heavy_ball_without_gossip():
+    """solo topology => mix(w) == w => DecentLaM must be bitwise SGD+momentum."""
+    cfg = AlgoConfig(algo="dpsgd", topology="solo", n_learners=4)
+    st_hb, _, _ = _run(cfg, sgd(0.05, momentum=0.9), steps=10)
+    st_dl, _, _ = _run(cfg, decentlam(0.05, momentum=0.9), steps=10)
+    np.testing.assert_array_equal(np.asarray(st_hb.params["w"]),
+                                  np.asarray(st_dl.params["w"]))
+
+
+def test_decentlam_removes_momentum_bias():
+    """Heterogeneous-curvature quadratic on a ring (the DecentLaM paper's
+    failure mode for naive momentum): f_j(w) = 0.5 a_j ||w - c_j||^2 with
+    spread-out a_j.  Naive heavy-ball DPSGD parks the average model at a
+    biased fixed point; DecentLaM lands on the momentum-free fixed point."""
+    n, d = 8, 8
+    cs = jax.random.normal(jax.random.PRNGKey(3), (n, d)) * 2.0
+    a = jnp.linspace(0.2, 1.8, n)
+    w_star = np.asarray((a[:, None] * cs).sum(0) / a.sum())
+
+    def loss_fn(p, b):
+        return 0.5 * jnp.mean(b["a"]) * jnp.mean(
+            jnp.sum((p["w"][None] - b["c"]) ** 2, -1))
+
+    batch = {"c": jnp.repeat(cs[:, None], 4, 1),
+             "a": jnp.repeat(a[:, None], 4, 1)}
+    params = {"w": jnp.zeros((d,))}
+    cfg = AlgoConfig(algo="dpsgd", topology="ring", n_learners=n)
+
+    def bias(opt):
+        st, _, _ = _run(cfg, opt, steps=600, loss_fn=loss_fn, params=params,
+                        batch=batch)
+        wbar = np.asarray(jnp.mean(st.params["w"], 0))
+        return float(np.linalg.norm(wbar - w_star))
+
+    lr = 0.2
+    b_naive = bias(sgd(lr, momentum=0.9))
+    b_dlam = bias(decentlam(lr, momentum=0.9))
+    b_plain = bias(sgd(lr))
+    assert b_naive > 1.5 * b_dlam, (b_naive, b_dlam)
+    np.testing.assert_allclose(b_dlam, b_plain, rtol=1e-3)
+
+
+def test_decentlam_trains_through_adpsgd():
+    """Time-varying matchings need the damped drift (see optim/decentlam.py):
+    with drift_scale = 1 - momentum the async path trains stably."""
+    cfg = AlgoConfig(algo="adpsgd", n_learners=8, max_staleness=4,
+                     slow_learner=0, slow_factor=3)
+    _, metrics, _ = _run(cfg, decentlam(0.05, momentum=0.9, drift_scale=0.1),
+                         steps=150)
+    first, last = float(metrics[0].loss), float(metrics[-1].loss)
+    assert np.isfinite(last) and last < first
+
+
+def test_decentlam_exact_drift_unstable_on_switching_topology():
+    """Documents WHY drift_scale matters: the paper-exact correction diverges
+    under per-step random matchings (static-W assumption violated)."""
+    cfg = AlgoConfig(algo="dpsgd", topology="random_pair", n_learners=8)
+    _, m_exact, _ = _run(cfg, decentlam(0.05, momentum=0.9), steps=150)
+    _, m_damped, _ = _run(cfg, decentlam(0.05, momentum=0.9, drift_scale=0.1),
+                          steps=150)
+    last_exact = float(m_exact[-1].loss)
+    last_damped = float(m_damped[-1].loss)
+    assert np.isfinite(last_damped) and last_damped < float(m_damped[0].loss)
+    assert (not np.isfinite(last_exact)) or last_exact > 2 * last_damped
+
+
+def test_decentlam_rejects_descend_then_mix():
+    cfg = AlgoConfig(algo="dpsgd", gossip_order="descend_then_mix",
+                     n_learners=4)
+    with pytest.raises(ValueError):
+        MultiLearnerTrainer(_quad_loss, decentlam(0.05), cfg)

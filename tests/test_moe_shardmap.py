@@ -25,14 +25,14 @@ params = init_moe_params(key, d, f, E, jnp.float32)
 x = jax.random.normal(jax.random.PRNGKey(1), (B, S, d))
 
 # big capacity so neither backend drops -> outputs must match exactly
-with jax.set_mesh(mesh):
+with mesh:
     y_sm = jax.jit(lambda p, xx: moe_forward_shardmap(
         p, xx, n_experts=E, top_k=k, capacity_factor=64.0))(params, x)
 y_ref = moe_forward(params, x, n_experts=E, top_k=k, capacity_factor=64.0)
 err = float(jnp.abs(y_sm - y_ref).max())
 
 # gradient path
-with jax.set_mesh(mesh):
+with mesh:
     g = jax.jit(jax.grad(lambda p, xx: jnp.sum(moe_forward_shardmap(
         p, xx, n_experts=E, top_k=k, capacity_factor=64.0) ** 2)))(params, x)
 gnorm = float(sum(jnp.abs(l).sum() for l in jax.tree_util.tree_leaves(g)))

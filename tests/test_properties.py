@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="install the [test] extra for "
+                    "property-based tests")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import dpsgd, topology as topo

@@ -2,6 +2,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis", reason="install the [test] "
+                                 "extra for property-based tests")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import topology as topo
