@@ -2,7 +2,7 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test bench-smoke bench dryrun
+.PHONY: test bench-smoke bench bench-check dryrun
 
 # tier-1 suite (the repo's verify command)
 test:
@@ -14,6 +14,18 @@ bench-smoke:
 	$(PYTHON) -m benchmarks.fig2_effective_lr
 	$(PYTHON) -m benchmarks.bench_kernels
 	$(PYTHON) -m benchmarks.fig3_straggler
+
+# bench-smoke + the CSV output contract (benchmarks/README.md): every
+# benchmark prints `name,us_per_call,derived` and writes a results table
+# capture with a redirect (not a pipe) so a failing benchmark fails the
+# target even without pipefail in the default make shell; clear the tables
+# first — the gate vouches only for THIS run's output, never stale CSVs
+bench-check:
+	rm -rf results/bench
+	$(MAKE) bench-smoke > bench_smoke.out 2>&1; status=$$?; \
+	    cat bench_smoke.out; exit $$status
+	$(PYTHON) -m benchmarks.check_contract bench_smoke.out \
+	    fig2_effective_lr bench_kernel fig3_straggler
 
 # the full paper sweep (writes results/bench/*.csv)
 bench:

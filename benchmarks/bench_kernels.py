@@ -9,7 +9,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import gossip_mix_update, ref
+from repro.kernels import gossip_mix_update, ref, reorth_pass
 from repro.kernels.flash_attention import flash_attention_fwd
 
 from .common import write_table
@@ -42,6 +42,18 @@ def main():
     unfused = (1 + K + 1) * 4 + (1 + 1) * 4 + (2 + 1) * 4   # per elem bytes
     fused = (1 + K + 1 + 1) * 4 + 2 * 4
     rows.append(["gossip_mix", us_ref, us_int, unfused / fused])
+
+    # Lanczos full-reorth sweep (landscape probe inner loop, DESIGN §10):
+    # fused dots+axpy streams {V, w} once per pass vs once per basis vector
+    M = 8
+    V = jax.random.normal(ks[0], (M, T, 128))
+    wv = jax.random.normal(ks[1], (T, 128))
+    mask = jnp.ones((M,), jnp.float32)
+    us_ref3 = timeit(lambda *a: ref.reorth_ref(*a)[0], V, wv, mask)
+    us_int3 = timeit(lambda *a: reorth_pass(*a, interpret=True)[0],
+                     V, wv, mask)
+    # traffic model: unfused 2M passes over w + 2 over V vs fused 2 + 2
+    rows.append(["reorth", us_ref3, us_int3, (2 * M + 2) / 4])
 
     S, hd = 512, 64
     q = jax.random.normal(ks[0], (1, 4, S, hd))

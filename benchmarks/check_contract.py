@@ -1,0 +1,99 @@
+"""CSV-contract check for the benchmark suite (benchmarks/README.md).
+
+Validates that a captured benchmark run (e.g. ``make bench-smoke | tee out``)
+honors the output contract:
+
+  * every summary line that claims to be a benchmark row parses as
+    ``name,us_per_call,derived`` with at most 2 splits (derived is free
+    text and may itself contain commas),
+  * every required benchmark (argv[2:], prefix-matched) produced >= 1 row,
+  * every results/bench/ table belonging to a required benchmark is a
+    non-empty CSV with a header row (with no required names given, ALL
+    tables are checked — the full `benchmarks.run` sweep mode).
+
+Usage:
+    python -m benchmarks.check_contract <captured-stdout> [required-name...]
+
+Exits non-zero with a per-violation report; CI uploads results/bench as an
+artifact right after this gate.
+"""
+from __future__ import annotations
+
+import csv
+import os
+import re
+import sys
+
+from .common import RESULTS
+
+# a contract row: bare name, numeric us_per_call, non-empty derived text
+ROW_RE = re.compile(r"^([a-z0-9_]+),([0-9]+(?:\.[0-9]+)?),(.+)$")
+
+
+def parse_rows(text: str):
+    rows = []
+    for line in text.splitlines():
+        m = ROW_RE.match(line.strip())
+        if m:
+            rows.append((m.group(1), float(m.group(2)), m.group(3)))
+    return rows
+
+
+def check_tables(results_dir: str, required=()):
+    errors = []
+    if not os.path.isdir(results_dir):
+        return [f"missing results dir {results_dir}"]
+    stems = [f[:-4] for f in os.listdir(results_dir) if f.endswith(".csv")]
+    # a required benchmark must have written SOME results table at all
+    for need in required:
+        if not any(s.startswith(need) or need.startswith(s) for s in stems):
+            errors.append(f"required benchmark `{need}` wrote no results "
+                          f"table under {results_dir}")
+    for fname in sorted(os.listdir(results_dir)):
+        if not fname.endswith(".csv"):
+            continue
+        stem = fname[:-4]
+        # smoke runs only vouch for their own tables; stale tables from
+        # other benchmarks (e.g. an old roofline aggregate) are not theirs
+        if required and not any(stem.startswith(r) or r.startswith(stem)
+                                for r in required):
+            continue
+        path = os.path.join(results_dir, fname)
+        with open(path, newline="") as f:
+            table = list(csv.reader(f))
+        if not table:
+            errors.append(f"{fname}: empty table")
+        elif len(table[0]) < 2:
+            errors.append(f"{fname}: header has < 2 columns: {table[0]}")
+        elif len(table) < 2:
+            errors.append(f"{fname}: header but no data rows")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    if not argv:
+        print("usage: check_contract <captured-stdout> [required-name...]")
+        return 2
+    with open(argv[0]) as f:
+        text = f.read()
+    required = argv[1:]
+
+    rows = parse_rows(text)
+    errors = []
+    if not rows:
+        errors.append("no `name,us_per_call,derived` rows found in output")
+    for need in required:
+        if not any(name.startswith(need) for name, _, _ in rows):
+            errors.append(f"required benchmark `{need}` emitted no row")
+    errors += check_tables(os.path.abspath(RESULTS), required)
+
+    for name, us, derived in rows:
+        print(f"ok: {name} ({us:.0f} us) {derived[:60]}")
+    for e in errors:
+        print(f"CONTRACT VIOLATION: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

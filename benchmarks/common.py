@@ -14,8 +14,10 @@ import jax
 
 from repro.core import AlgoConfig, MultiLearnerTrainer
 from repro.data import ShardedLoader, TemplateImages
+from repro.landscape import (AutoLRController, ProbeSchedule,
+                             make_trainer_probe)
 from repro.models import fcnet
-from repro.optim import sgd
+from repro.optim import scale_by_controller, set_controller_scale, sgd
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
@@ -33,38 +35,79 @@ def write_table(name: str, header, rows):
 def train_fc(algo: str, lr: float, *, n: int = 5, local_batch: int = 400,
              steps: int = 150, seed: int = 0, noise_std: float = 0.01,
              topology: str = "random_pair", diag_every: int = 0,
+             landscape_every: int = 0, autolr=None, probe_kwargs=None,
              dataset=None, optimizer=None, algo_kwargs=None):
-    """Returns dict(losses, diags, us_per_step, trainer, state, loader).
+    """Returns dict(losses, diags, probes, us_per_step, trainer, state, loader).
 
     ``algo_kwargs`` are forwarded to AlgoConfig (adpsgd staleness bound /
     straggler injection: max_staleness, slow_learner, slow_factor).
+
+    Probes ride the trainer's hook seam (DESIGN §10): ``diag_every`` runs
+    the paper diagnostics, ``landscape_every`` the curvature probe; results
+    land in ``diags`` / ``probes`` as (step, result) pairs.  ``algo=
+    'ssgd_autolr'`` runs SSGD with the optimizer wrapped in
+    scale_by_controller and an AutoLRController closing the loop at
+    ``landscape_every`` cadence (default every 10 steps).
     """
     ds = dataset or TemplateImages()
     loader = ShardedLoader(ds, n_learners=n, local_batch=local_batch,
                            seed=seed)
     key = jax.random.PRNGKey(seed)
     params = fcnet.init_params(key, in_dim=784, hidden=50)
+
+    controller = None
+    opt = optimizer or sgd(lr)
+    if algo == "ssgd_autolr":
+        algo = "ssgd"
+        opt = scale_by_controller(opt)
+        controller = autolr or AutoLRController(alpha0=lr)
+        landscape_every = landscape_every or 10
+
     tr = MultiLearnerTrainer(
-        fcnet.loss_fn, optimizer or sgd(lr),
+        fcnet.loss_fn, opt,
         AlgoConfig(algo=algo, topology=topology, n_learners=n,
                    noise_std=noise_std, **(algo_kwargs or {})),
         alpha_for_diag=lr)
+
+    diags, probes = [], []
+    if diag_every:
+        tr.add_probe(
+            "diag", ProbeSchedule(every=diag_every, start=diag_every),
+            lambda st, b: tr.diagnostics(st, b),
+            on_result=lambda st, d: (diags.append((int(st.step), d)), st)[1])
+    if landscape_every:
+        probe_fn = make_trainer_probe(fcnet.loss_fn, alpha=lr,
+                                      **(probe_kwargs or {}))
+
+        def on_probe(st, r):
+            probes.append((int(st.step), r))
+            if controller is not None:
+                st = st._replace(opt_state=set_controller_scale(
+                    st.opt_state, controller.update(r)))
+            return st
+        tr.add_probe("landscape", ProbeSchedule(every=landscape_every),
+                     probe_fn, on_result=on_probe)
+
     st = tr.init(key, params)
-    losses, diags, stale_max = [], [], 0.0
+    losses, stale_max = [], 0.0
+    if tr.probes_due(0):   # let a controller engage before the first step
+        st, _ = tr.run_probes(st, loader.batch(50_000), step=0)
     # warm-up/compile step excluded from timing
     st, m = tr.train_step(st, loader.batch(0))
     t0 = time.perf_counter()
     for i in range(1, steps):
+        if tr.probes_due(i):
+            t_probe = time.perf_counter()
+            st, _ = tr.run_probes(st, loader.batch(50_000 + i), step=i)
+            t0 += time.perf_counter() - t_probe   # keep step timing clean
         st, m = tr.train_step(st, loader.batch(i))
         losses.append(float(m.loss))
         stale_max = max(stale_max, float(m.staleness_max))
-        if diag_every and i % diag_every == 0:
-            d = tr.diagnostics(st, loader.batch(50_000 + i))
-            diags.append((i, d))
     dt = (time.perf_counter() - t0) / max(steps - 1, 1)
-    return {"losses": losses, "diags": diags, "us_per_step": dt * 1e6,
-            "trainer": tr, "state": st, "loader": loader,
-            "staleness_max": stale_max}
+    return {"losses": losses, "diags": diags, "probes": probes,
+            "us_per_step": dt * 1e6, "trainer": tr, "state": st,
+            "loader": loader, "staleness_max": stale_max,
+            "controller": controller}
 
 
 def final_loss(losses, k: int = 10) -> float:

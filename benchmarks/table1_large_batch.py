@@ -1,6 +1,9 @@
 """Paper Table 1 (CIFAR-10 batch-size scaling, proxied at CPU scale):
-linear-scaling-rule lr for increasing total batch; SSGD vs DPSGD final loss.
-The paper's signature: parity at moderate batch, DPSGD wins at the largest."""
+linear-scaling-rule lr for increasing total batch; SSGD vs DPSGD final loss,
+plus the new closed-loop ``ssgd_autolr`` column (DESIGN §10): plain SSGD
+whose LR multiplier is clamped online from probed sharpness — the explicit
+version of DPSGD's implicit self-adjustment.  The scenario: SSGD+AutoLR
+survives the large-batch LRs where SSGD diverges."""
 from __future__ import annotations
 
 from .common import final_loss, train_fc, write_table
@@ -11,20 +14,22 @@ SCALES = (1, 2, 4)                  # nB = 500, 1000, 2000
 
 def main():
     rows = []
-    worst_gap = None
     us = 0.0
     for s in SCALES:
-        for algo in ("ssgd", "dpsgd"):
+        for algo in ("ssgd", "dpsgd", "ssgd_autolr"):
             r = train_fc(algo, BASE_LR * s, local_batch=BASE_LOCAL * s,
                          steps=120)
             us = r["us_per_step"]
+            ctl = r["controller"]
             rows.append([algo, 5 * BASE_LOCAL * s, BASE_LR * s,
-                         final_loss(r["losses"])])
-    write_table("table1_large_batch", ["algo", "nB", "lr", "final_loss"],
-                rows)
+                         final_loss(r["losses"]),
+                         ctl.scale if ctl is not None else 1.0])
+    write_table("table1_large_batch",
+                ["algo", "nB", "lr", "final_loss", "autolr_scale"], rows)
     big = {r[0]: r[3] for r in rows if r[1] == 5 * BASE_LOCAL * SCALES[-1]}
     derived = (f"largest-batch loss ssgd={big['ssgd']:.3f} "
-               f"dpsgd={big['dpsgd']:.3f} (paper T1: DPSGD wins at bs=8192)")
+               f"dpsgd={big['dpsgd']:.3f} ssgd_autolr={big['ssgd_autolr']:.3f}"
+               " (paper T1: DPSGD wins at bs=8192; AutoLR keeps SSGD alive)")
     print(f"table1_large_batch,{us:.0f},{derived}")
 
 

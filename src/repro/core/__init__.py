@@ -5,7 +5,7 @@ from .dpsgd import (AlgoConfig, mix_einsum, mix_ppermute_ring,
 from .topology import (full_matrix, ring_matrix, torus_matrix, pair_partners,
                        random_pair_matrix, hierarchical_matrix,
                        is_doubly_stochastic, spectral_gap, make_mixing_fn)
-from .trainer import MultiLearnerTrainer, TrainState, StepMetrics
+from .trainer import MultiLearnerTrainer, ProbeHook, TrainState, StepMetrics
 from .diagnostics import DiagStats, compute_diagnostics
 from .smoothing import smoothed_loss, estimate_smoothness
 from .util import learner_mean, learner_var
@@ -15,7 +15,8 @@ __all__ = [
     "mix_pair_gather", "pair_partners", "straggler_active_mask",
     "full_matrix", "ring_matrix", "torus_matrix", "random_pair_matrix",
     "hierarchical_matrix", "is_doubly_stochastic", "spectral_gap",
-    "make_mixing_fn", "MultiLearnerTrainer", "TrainState", "StepMetrics",
+    "make_mixing_fn", "MultiLearnerTrainer", "ProbeHook", "TrainState",
+    "StepMetrics",
     "DiagStats", "compute_diagnostics", "smoothed_loss", "estimate_smoothness",
     "learner_mean", "learner_var",
 ]

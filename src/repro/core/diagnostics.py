@@ -9,7 +9,9 @@ Definitions (all on the flattened parameter space):
   alpha_e    = alpha * (g_a . g) / ||g||^2          effective learning rate (Eq. 4)
   eta_perp   = -alpha g_a + alpha_e g               orthogonal noise
   Delta      = ||eta_perp||^2                       noise strength
-  Delta_S    = alpha^2 (||g0||^2 - (g0.g)^2/||g||^2)   SSGD noise (App. B)
+  Delta_S    = alpha^2 sum_j ||g_j(w_a) - g0||^2 / (n(n-1))   SSGD noise
+               (App. B: alpha^2 sigma_mb^2/n with the unbiased sample
+               estimate of the minibatch-gradient variance sigma_mb^2)
   Delta2     = alpha^2 ||(1/n) sum_j [grad L^{mu_j}(w_j) - grad L^{mu_j}(w_a)]||^2
   sigma_w^2  = Tr(C) = sum_l (1/n) sum_j (w_jl - w_al)^2   weight variance
 
@@ -71,14 +73,21 @@ def compute_diagnostics(loss_fn: Callable, stacked_params, stacked_batch,
     eta = tree_sub(tree_scale(alpha_e, g), tree_scale(alpha, g_a))
     delta_total = tree_norm_sq(eta)
 
-    # Delta_S = alpha^2 (||g0||^2 - (g0.g)^2 / ||g||^2)  -> 0 here because
-    # g == g0 by construction (superbatch == union of minibatches); the
-    # fluctuation version uses per-minibatch deviation:
-    dev = jax.tree_util.tree_map(lambda gj, gm: gj - gm[None], g_at_mean,
-                                 jax.tree_util.tree_map(lambda x: x, g0))
-    # mean over learners of ||g_j(w_a) - g0||^2 / n  (batch-noise strength)
+    # Delta_S (App. B): the SSGD minibatch-noise strength
+    #     Delta_S = alpha^2 E||g_bar - g_true||^2 = alpha^2 sigma_mb^2 / n
+    # where g_bar = (1/n) sum_j g_j(w_a) is the superbatch gradient and
+    # sigma_mb^2 = E||g_j(w_a) - g_true||^2 the per-minibatch variance.
+    # The closed form alpha^2(||g0||^2 - (g0.g)^2/||g||^2) is 0 here because
+    # g == g0 by construction (superbatch == union of minibatches), so we
+    # estimate sigma_mb^2 from the sample instead.  Because g0 is the mean
+    # OF the g_j, the naive mean_j ||g_j - g0||^2 underestimates sigma_mb^2
+    # by (n-1)/n (sample-variance bias); the unbiased estimator is
+    # sum_j ||g_j - g0||^2 / (n-1), giving
+    #     Delta_S = alpha^2 sum_j ||g_j(w_a) - g0||^2 / (n (n-1)).
+    dev = jax.tree_util.tree_map(lambda gj, gm: gj - gm[None], g_at_mean, g0)
     per = jax.vmap(tree_norm_sq)(dev)
-    delta_s = alpha ** 2 * jnp.mean(per) / per.shape[0]
+    n = per.shape[0]
+    delta_s = alpha ** 2 * jnp.sum(per) / (n * max(n - 1, 1))
 
     # Delta^(2): gradients moved by the weight spread (Eq. 5 numerator)
     diff = tree_sub(g_a, learner_mean(g_at_mean))

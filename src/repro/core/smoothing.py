@@ -61,5 +61,5 @@ def estimate_smoothness(loss_fn: Callable, params, batch, key,
         den = jnp.sqrt(tree_norm_sq(tree_sub(x, y)))
         return num / jnp.maximum(den, 1e-12)
 
-    vals = jnp.stack([one(keys[i]) for i in range(n_pairs)])
-    return jnp.max(vals)
+    # one vmapped probe batch instead of a Python loop of n_pairs traces
+    return jnp.max(jax.vmap(one)(keys))

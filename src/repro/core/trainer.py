@@ -63,11 +63,28 @@ def _select(mask, new, old):
 
 
 @dataclasses.dataclass
+class ProbeHook:
+    """One scheduled measurement pass (the probe seam, DESIGN §10).
+
+    ``schedule`` is anything with ``due(step) -> bool`` (typically
+    landscape.ProbeSchedule); ``fn(state, batch) -> result`` is the
+    measurement (trainer.diagnostics, a landscape probe, ...);
+    ``on_result(state, result) -> state`` optionally closes a control loop
+    (e.g. AutoLR writing its multiplier into the optimizer state).
+    """
+    name: str
+    schedule: Any
+    fn: Callable
+    on_result: Optional[Callable] = None
+
+
+@dataclasses.dataclass
 class MultiLearnerTrainer:
     loss_fn: Callable          # (params, batch) -> scalar, one learner's minibatch
     optimizer: Optimizer
     algo: AlgoConfig
     alpha_for_diag: float = 1.0   # alpha used in the alpha_e instrument
+    hooks: list = dataclasses.field(default_factory=list)  # [ProbeHook]
 
     def __post_init__(self):
         self._mix_fn = topo.make_mixing_fn(self.algo.topology, self.algo.n_learners)
@@ -210,6 +227,38 @@ class MultiLearnerTrainer:
         )
         return TrainState(new_params, opt_state, state.step + 1, state.rng,
                           buffer=buffer, age=age, clock=clock), metrics
+
+    # -- probe seam (replaces ad-hoc diag_every loops; DESIGN §10) ------------
+    def add_probe(self, name: str, schedule, fn,
+                  on_result: Optional[Callable] = None) -> None:
+        """Register a scheduled probe.  ``schedule.due(step)`` gates it;
+        ``fn(state, batch) -> result``; optional ``on_result(state, result)
+        -> state`` feeds a controller back into the training state."""
+        self.hooks.append(ProbeHook(name, schedule, fn, on_result))
+
+    def probes_due(self, step: int) -> bool:
+        """True if any registered probe fires at ``step`` (lets the host
+        loop skip fetching a probe superbatch on quiet steps)."""
+        return any(h.schedule.due(step) for h in self.hooks)
+
+    def run_probes(self, state: TrainState, stacked_batch, step: int = None):
+        """Run every due probe; returns (possibly updated state, {name: result}).
+
+        Pass the same ``step`` you gated on with ``probes_due`` — a host
+        loop counter can lag ``state.step`` (e.g. after a warm-up compile
+        step) and silently firing on the wrong one would no-op the probes.
+        Defaults to ``int(state.step)``.
+        """
+        step = int(state.step) if step is None else step
+        results = {}
+        for h in self.hooks:
+            if not h.schedule.due(step):
+                continue
+            r = h.fn(state, stacked_batch)
+            results[h.name] = r
+            if h.on_result is not None:
+                state = h.on_result(state, r)
+        return state, results
 
     # -- diagnostics (paper Fig. 2b / Fig. 4) ---------------------------------
     def _diagnostics(self, state: TrainState, stacked_batch) -> DiagStats:

@@ -1,7 +1,9 @@
-from .ops import flash_attention, dpsgd_fused_update
+from .ops import flash_attention, dpsgd_fused_update, reorthogonalize
 from .gossip_mix import gossip_mix_update, flatten_for_kernel
 from .flash_attention import flash_attention_fwd
+from .reorth import reorth_pass, reorth_dots, reorth_axpy
 from . import ref
 
 __all__ = ["flash_attention", "dpsgd_fused_update", "gossip_mix_update",
-           "flatten_for_kernel", "flash_attention_fwd", "ref"]
+           "flatten_for_kernel", "flash_attention_fwd", "reorthogonalize",
+           "reorth_pass", "reorth_dots", "reorth_axpy", "ref"]

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from .flash_attention import flash_attention_fwd
 from .gossip_mix import gossip_mix_update, flatten_for_kernel
+from .reorth import reorth_pass
 from . import ref
 
 
@@ -69,6 +70,26 @@ def flash_attention(q, k, v, *, q_positions=None, k_positions=None,
     """
     return _flash(q, k, v, causal, window, attn_softcap, q_positions,
                   k_positions)
+
+
+def reorthogonalize(basis, w, mask, *, backend: str = "pallas"):
+    """Fully reorthogonalize w against the masked basis prefix (DESIGN §10).
+
+    basis: (M, T, 128) stacked flat Lanczos vectors; w: (T, 128) candidate;
+    mask: (M,) 0/1 f32 marking the live prefix.  Two classical-Gram-Schmidt
+    sweeps (CGS2 — the "twice is enough" rule) through the fused Pallas
+    dot/axpy kernels, or through the jnp oracle with ``backend='ref'``
+    (used under multi-device meshes where the flat view would break the
+    parameter sharding; see launch/train.py).
+    """
+    if backend == "ref":
+        w, _ = ref.reorth_ref(basis, w, mask)
+        w, _ = ref.reorth_ref(basis, w, mask)
+        return w
+    interpret = _on_cpu()
+    w, _ = reorth_pass(basis, w, mask, interpret=interpret)
+    w, _ = reorth_pass(basis, w, mask, interpret=interpret)
+    return w
 
 
 def dpsgd_fused_update(params_tree, neighbor_trees, grads_tree, momentum_tree,

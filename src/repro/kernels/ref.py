@@ -17,6 +17,22 @@ def gossip_mix_update_ref(w, neighbors, grads, momentum, coefs, *, lr: float,
     return mixed - lr * mu_new, mu_new
 
 
+def reorth_ref(basis, w, mask):
+    """Same contract as kernels.reorth.reorth_pass (one CGS sweep).
+
+    basis: (M, T, 128); w: (T, 128); mask: (M,) 0/1.  Returns (w_new, dots).
+    Loops vector-by-vector exactly like the kernel so the two stay
+    bitwise-close in interpret mode.
+    """
+    wf = w.astype(jnp.float32)
+    dots = jnp.stack([jnp.sum(basis[k].astype(jnp.float32) * wf)
+                      for k in range(basis.shape[0])]) * mask
+    acc = wf
+    for k in range(basis.shape[0]):
+        acc = acc - dots[k] * basis[k].astype(jnp.float32)
+    return acc.astype(w.dtype), dots
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                         attn_softcap: float = 0.0):
     """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd).

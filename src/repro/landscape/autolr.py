@@ -1,0 +1,80 @@
+"""Closed-loop AutoLR: make SSGD's learning rate landscape-dependent.
+
+The paper's observation is that DPSGD *implicitly* self-adjusts its
+effective LR: gossip noise shrinks alpha_e on sharp terrain and restores it
+as the landscape smooths.  The AutoLRController does the same thing
+*explicitly* for plain SSGD, driven by the probe engine instead of by
+gossip noise (AdaScale / DecentLaM measure related signals online;
+DESIGN §10):
+
+    control law (per probe, at base LR alpha0):
+        s_ema  <- ema * s_ema + (1 - ema) * sharpness          (smoothed)
+        raw    =  rho / (alpha0 * s_ema)        # target alpha*lambda = rho
+        raw    /= 1 + gns_weight * gns          # optional noise backoff
+        scale  =  clip(raw, min_scale, max_scale)
+
+rho < 2 keeps the *effective* step inside the quadratic stability edge
+(alpha * lambda_max < 2); on smooth terrain raw > max_scale and the clamp
+returns the full base LR, i.e. the controller only intervenes where SSGD
+would diverge — exactly the regime of paper Table 1 ("SSGD+AutoLR survives
+the large-batch LRs where SSGD diverges", benchmarks/table1_large_batch.py).
+
+The controller is deliberately host-side Python state (it runs at probe
+cadence, between jitted steps); the jitted path reads the resulting scale
+from the optimizer state via optim.scale_by_controller /
+set_controller_scale, so one compiled train step serves every scale value.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .probe import ProbeResult
+
+__all__ = ["AutoLRController"]
+
+
+@dataclasses.dataclass
+class AutoLRController:
+    """Probe results in, clamped LR multiplier out.
+
+    alpha0:     the base learning rate the wrapped optimizer was built with.
+    rho:        target alpha * lambda_max product (< 2, the stability edge).
+    min_scale / max_scale: hard clamp on the emitted multiplier.
+    ema:        sharpness smoothing (0 = trust each probe fully).
+    gns_weight: optional backoff when the gradient noise scale is large
+                (0 disables; noise-dominated probes then don't shrink LR).
+    """
+    alpha0: float
+    rho: float = 1.8
+    min_scale: float = 0.05
+    max_scale: float = 1.0
+    ema: float = 0.3
+    gns_weight: float = 0.0
+
+    scale: float = 1.0                      # last emitted multiplier
+    sharpness_ema: Optional[float] = None   # smoothed lambda_max
+
+    def __post_init__(self):
+        assert 0.0 < self.rho < 2.0, "rho must sit inside the stability edge"
+        assert 0.0 < self.min_scale <= self.max_scale, (self.min_scale,
+                                                        self.max_scale)
+        assert 0.0 <= self.ema < 1.0, self.ema
+
+    def update(self, probe: ProbeResult) -> float:
+        """Consume one probe, return the new LR multiplier in [min, max]."""
+        s = float(probe.sharpness)
+        if self.sharpness_ema is None or not (s == s):   # first probe / nan
+            self.sharpness_ema = s if s == s else self.sharpness_ema
+        else:
+            self.sharpness_ema = (self.ema * self.sharpness_ema
+                                  + (1.0 - self.ema) * s)
+        if self.sharpness_ema is None or self.sharpness_ema <= 0.0:
+            # flat or indefinite-direction-free probe: nothing to clamp on
+            self.scale = self.max_scale
+            return self.scale
+        raw = self.rho / (self.alpha0 * self.sharpness_ema)
+        if self.gns_weight:
+            raw /= 1.0 + self.gns_weight * float(probe.gns)
+        self.scale = min(max(raw, self.min_scale), self.max_scale)
+        return self.scale

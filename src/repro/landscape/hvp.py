@@ -1,0 +1,92 @@
+"""Hessian-vector products and stochastic trace estimators (DESIGN §10).
+
+Everything here is a pure pytree function: no flattening, no framework
+state, so the same code runs under vmap (research trainer), pjit/shard_map
+(launch/train.py — the jvp-of-grad inherits whatever sharding the params
+carry), and inside the Lanczos iteration.
+
+  hvp(loss, p, v)              = H(p) v            via forward-over-reverse
+                                 (batch is baked into `loss`; see
+                                 superbatch_loss_fn / make_hvp_fn)
+  hutchinson_trace             ~ Tr(H)             Rademacher probes
+  trace_hc                     = Tr(H C)           EXACT given the sample:
+      C = (1/n) sum_j d_j d_j^T with d_j = w_j - w_a, so
+      Tr(H C) = (1/n) sum_j d_j^T H d_j — the learner deviations ARE the
+      probe vectors; no stochastic estimate needed.
+
+Tr(H C) is the paper's coupling between local curvature H and the learner
+weight covariance C: the quantity that makes DPSGD's noise *landscape
+dependent* (Sec. 3), and the input to the Eq. 4 effective-LR predictor.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.util import learner_mean, tree_dot, tree_sub
+
+__all__ = ["hvp", "make_hvp_fn", "superbatch_loss_fn", "hutchinson_trace",
+           "trace_hc", "tree_rademacher_like"]
+
+
+def superbatch_loss_fn(loss_fn: Callable, stacked_batch) -> Callable:
+    """params -> mean over the n learner minibatches of loss_fn(params, b_j).
+
+    The superbatch loss is the L whose Hessian the paper's analysis uses
+    (gradients g and curvature H both evaluated at w_a over mu = U mu_j).
+    """
+    def f(params):
+        return jnp.mean(jax.vmap(loss_fn, in_axes=(None, 0))(params,
+                                                             stacked_batch))
+    return f
+
+
+def hvp(loss: Callable, params, vector):
+    """H(params) @ vector for a scalar loss(params) — forward-over-reverse."""
+    return jax.jvp(jax.grad(loss), (params,), (vector,))[1]
+
+
+def make_hvp_fn(loss_fn: Callable, params, stacked_batch) -> Callable:
+    """Closure v -> H v with H at ``params`` over the superbatch."""
+    loss = superbatch_loss_fn(loss_fn, stacked_batch)
+
+    def matvec(v):
+        return hvp(loss, params, v)
+    return matvec
+
+
+def tree_rademacher_like(key, tree):
+    """iid +-1 probe with the same structure/shapes as ``tree``."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    probes = [jax.random.rademacher(k, l.shape, jnp.float32)
+              for k, l in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, probes)
+
+
+def hutchinson_trace(loss_fn: Callable, params, stacked_batch, key,
+                     n_samples: int = 8) -> jnp.ndarray:
+    """Tr(H) ~ E_z[z^T H z], z Rademacher (unbiased; var 2||H_offdiag||_F^2)."""
+    matvec = make_hvp_fn(loss_fn, params, stacked_batch)
+
+    def one(k):
+        z = tree_rademacher_like(k, params)
+        return tree_dot(z, matvec(z))
+    return jnp.mean(jax.vmap(one)(jax.random.split(key, n_samples)))
+
+
+def trace_hc(loss_fn: Callable, stacked_params, stacked_batch) -> jnp.ndarray:
+    """Tr(H C) = (1/n) sum_j d_j^T H d_j with H at w_a, d_j = w_j - w_a.
+
+    Exact in the sample covariance (the d_j are the eigendirections the
+    paper's C actually has); costs n HVPs.
+    """
+    w_a = learner_mean(stacked_params)
+    matvec = make_hvp_fn(loss_fn, w_a, stacked_batch)
+
+    def one(w_j):
+        d = tree_sub(w_j, w_a)
+        return tree_dot(d, matvec(d))
+    return jnp.mean(jax.vmap(one)(stacked_params))

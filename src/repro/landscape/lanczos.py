@@ -1,0 +1,115 @@
+"""m-step Lanczos on the HVP operator: top-k Hessian eigenvalues (sharpness).
+
+The iteration lives on the (T, 128) flat parameter view (the same layout as
+the gossip kernel, via kernels.gossip_mix.flatten_for_kernel) so the basis
+is one stacked (m+1, T, 128) array and full reorthogonalization — the
+memory-bound dot/axpy inner loop — runs through the fused Pallas kernels in
+kernels/reorth.py (jnp oracle fallback: ``reorth='ref'``; used under
+multi-device meshes where flattening would regather sharded params, see
+launch/train.py and DESIGN §10).
+
+Padding note: flatten_for_kernel zero-pads to a lane multiple.  The HVP
+operator maps pad-zero vectors to pad-zero vectors (unflatten drops the pad,
+flatten re-zeros it), and the start vector is generated as a pytree before
+flattening, so the iteration never leaves the zero-pad subspace and the
+spectrum is exactly that of H.
+
+``m`` steps cost m HVPs + O(m^2) fused dot/axpys; eigenvalues come from the
+dense (m, m) tridiagonal eigensolve (trivial at m ~ 8-32).  With full
+reorthogonalization the extreme eigenvalues converge first — sharpness
+(lambda_max, the AutoLR controller's input) is accurate to <<5% long before
+the interior spectrum is.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.util import tree_gaussian_like
+from ..kernels.gossip_mix import flatten_for_kernel
+from ..kernels.ops import reorthogonalize
+
+__all__ = ["LanczosResult", "lanczos", "lanczos_pytree", "sharpness"]
+
+
+class LanczosResult(NamedTuple):
+    eigenvalues: jnp.ndarray   # (m,) Ritz values, ascending
+    alphas: jnp.ndarray        # (m,) tridiagonal diagonal
+    betas: jnp.ndarray         # (m-1,) tridiagonal off-diagonal
+    basis: jnp.ndarray         # (m+1, T, 128) Lanczos vectors (flat view)
+
+
+def _tridiag_eigvals(alphas, betas):
+    m = alphas.shape[0]
+    t = (jnp.diag(alphas) + jnp.diag(betas, 1) + jnp.diag(betas, -1)
+         if m > 1 else jnp.diag(alphas))
+    return jnp.linalg.eigvalsh(t)
+
+
+def lanczos(matvec_flat: Callable, q0, m: int, *,
+            reorth: str = "pallas") -> LanczosResult:
+    """m-step Lanczos for a symmetric operator on the (T, 128) flat view.
+
+    matvec_flat: (T, 128) -> (T, 128); q0: start vector (need not be
+    normalized).  Unrolled Python loop (m is static — call under jit).
+    """
+    T, lane = q0.shape
+    eps = jnp.float32(1e-30)
+    q0 = q0.astype(jnp.float32)
+    q0 = q0 / jnp.maximum(jnp.sqrt(jnp.sum(q0 * q0)), eps)
+    basis = jnp.zeros((m + 1, T, lane), jnp.float32).at[0].set(q0)
+
+    alphas, betas = [], []
+    for j in range(m):
+        w = matvec_flat(basis[j]).astype(jnp.float32)
+        alpha_j = jnp.sum(w * basis[j])
+        alphas.append(alpha_j)
+        # full reorthogonalization against ALL previous vectors (CGS2 through
+        # the fused kernel) — subsumes the textbook alpha/beta subtraction
+        mask = (jnp.arange(m + 1) <= j).astype(jnp.float32)
+        w = reorthogonalize(basis, w, mask, backend=reorth)
+        beta_j = jnp.sqrt(jnp.sum(w * w))
+        if j < m - 1:
+            betas.append(beta_j)
+        # on breakdown (beta ~ 0: invariant subspace found) the normalized
+        # vector is junk but its coupling beta is ~0, so Ritz values stand
+        basis = basis.at[j + 1].set(w / jnp.maximum(beta_j, eps))
+
+    alphas = jnp.stack(alphas)
+    betas = jnp.stack(betas) if betas else jnp.zeros((0,), jnp.float32)
+    return LanczosResult(_tridiag_eigvals(alphas, betas), alphas, betas, basis)
+
+
+def lanczos_pytree(loss_fn_or_matvec, params, stacked_batch=None, *,
+                   m: int = 8, key=None, reorth: str = "pallas",
+                   matvec=None) -> LanczosResult:
+    """Lanczos on the Hessian of the superbatch loss at ``params``.
+
+    Either pass ``loss_fn_or_matvec`` = loss_fn(params, batch) together with
+    ``stacked_batch`` (leaves (n, B, ...)), or a pytree operator via
+    ``matvec=``.  ``key`` seeds the start vector (default PRNGKey(0)).
+    """
+    from .hvp import make_hvp_fn   # local import: hvp is kernel-free
+
+    if matvec is None:
+        matvec = make_hvp_fn(loss_fn_or_matvec, params, stacked_batch)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    q0_tree = tree_gaussian_like(key, params, 1.0)
+    q0, _ = flatten_for_kernel(q0_tree)
+    _, unflatten = flatten_for_kernel(params)
+
+    def matvec_flat(v_flat):
+        hv = matvec(unflatten(v_flat))
+        return flatten_for_kernel(hv)[0]
+
+    return lanczos(matvec_flat, q0, m, reorth=reorth)
+
+
+def sharpness(result: LanczosResult) -> jnp.ndarray:
+    """lambda_max(H) — the stability-limiting curvature (alpha < 2/sharpness)."""
+    return result.eigenvalues[-1]

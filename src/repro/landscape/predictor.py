@@ -1,0 +1,43 @@
+"""Eq. 4 effective-learning-rate prediction from measured curvature.
+
+The paper *measures* alpha_e = alpha (g_a . g) / ||g||^2 (core/diagnostics).
+This module *predicts* it from the probe quantities, closing the loop
+between Sec. 3's analysis and the instrument:
+
+    alpha_e ~= alpha * (1 - (alpha / 2) * Tr(H C) / sigma_w^2)        (Eq. 4)
+
+Reading: Tr(H C) / Tr(C) is the covariance-weighted mean curvature h_eff —
+the curvature the learner cloud actually *samples* (C weights each Hessian
+direction by how much the learners spread along it; sigma_w^2 = Tr(C)).
+alpha * (1 - (alpha/2) h_eff) is the standard quadratic-descent
+renormalization of the step size at curvature h_eff: on rough terrain
+(h_eff large) the predicted effective LR drops; as DPSGD smooths the
+landscape it recovers — the self-adjustment mechanism, now falsifiable:
+benchmarks/fig2_effective_lr.py overlays this prediction against the
+measured alpha_e trajectory.
+
+The prediction degrades exactly where the expansion does: once
+alpha * h_eff > 2 (beyond the quadratic stability edge) or when sigma_w^2
+~ 0 (SSGD: no learner spread, alpha_e == alpha by construction — we return
+alpha there rather than 0/0).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["effective_curvature", "predict_alpha_e"]
+
+
+def effective_curvature(trace_hc, sigma_w_sq, eps: float = 1e-12):
+    """h_eff = Tr(H C) / Tr(C); 0 when the learners have not spread (Tr C ~ 0)."""
+    trace_hc = jnp.asarray(trace_hc, jnp.float32)
+    sigma_w_sq = jnp.asarray(sigma_w_sq, jnp.float32)
+    return jnp.where(sigma_w_sq > eps, trace_hc / jnp.maximum(sigma_w_sq, eps),
+                     0.0)
+
+
+def predict_alpha_e(alpha, trace_hc, sigma_w_sq, eps: float = 1e-12):
+    """Paper Eq. 4: alpha_e ~= alpha (1 - (alpha/2) Tr(H C) / sigma_w^2)."""
+    alpha = jnp.asarray(alpha, jnp.float32)
+    return alpha * (1.0 - 0.5 * alpha
+                    * effective_curvature(trace_hc, sigma_w_sq, eps))

@@ -1,0 +1,137 @@
+"""The landscape probe engine: schedule, measurement bundle, trainer hook.
+
+A *probe* is an extra (scheduled, off-the-training-path) measurement pass
+that looks at second-order structure: sharpness lambda_max via Lanczos,
+Tr(H) via Hutchinson, Tr(H C) against the learner covariance, the gradient
+noise scale, and the Eq. 4 predicted effective LR.  Probes are pure jitted
+functions of (params, superbatch, key); the ProbeSchedule decides *when*
+the host loop invokes them (the seam that replaced the ad-hoc ``diag_every``
+logic — see MultiLearnerTrainer.add_probe / run_probes).
+
+Cost per probe: 1 fwd/bwd (gradients) + (lanczos_iters + n learners +
+hutchinson_samples) HVPs at ~2 fwd/bwd each.  At the default cadence
+(every ~10-20 steps) this is a few percent of training time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.util import learner_mean, learner_var, tree_norm_sq
+from .hvp import hutchinson_trace, superbatch_loss_fn, trace_hc
+from .lanczos import lanczos_pytree, sharpness
+from .predictor import predict_alpha_e
+
+__all__ = ["ProbeSchedule", "ProbeResult", "probe_landscape",
+           "make_probe_fn", "make_trainer_probe"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeSchedule:
+    """When a probe fires: every ``every`` steps, starting at ``start``.
+
+    ``every=0`` disables the probe.  Deliberately dumb (modular arithmetic on
+    the host-visible step) so schedules compose with any training loop; the
+    trainer only ever calls ``due(step)``.
+    """
+    every: int = 0
+    start: int = 0
+
+    def due(self, step: int) -> bool:
+        return (self.every > 0 and step >= self.start
+                and (step - self.start) % self.every == 0)
+
+
+class ProbeResult(NamedTuple):
+    """One landscape measurement (all scalars, f32)."""
+    sharpness: jnp.ndarray      # lambda_max(H) at w_a (Lanczos)
+    trace_h: jnp.ndarray        # Tr(H) (Hutchinson)
+    trace_hc: jnp.ndarray       # Tr(H C) against the learner covariance
+    sigma_w_sq: jnp.ndarray     # Tr(C) weight variance
+    grad_norm: jnp.ndarray      # ||g|| at w_a over the superbatch
+    gns: jnp.ndarray            # gradient noise scale: sigma_mb^2 / ||g||^2
+    alpha_e_pred: jnp.ndarray   # Eq. 4 prediction (predictor.py)
+
+
+def probe_landscape(loss_fn: Callable, params, stacked_batch, key, *,
+                    alpha: float, lanczos_iters: int = 8,
+                    hutchinson_samples: int = 4, stacked: bool = True,
+                    reorth: str = "pallas") -> ProbeResult:
+    """Measure the landscape at (the mean of) ``params`` over a superbatch.
+
+    ``stacked=True``: params leaves carry a leading learner axis (n, ...) —
+    the covariance terms (Tr(H C), sigma_w^2) are measured from the learner
+    spread.  ``stacked=False``: a single replica (the pjit SSGD path) — the
+    spread terms are identically 0 and alpha_e_pred == alpha.
+    stacked_batch leaves are (n, B, ...) either way (the n superbatch shards
+    double as the minibatch sample for the gradient noise scale).
+    """
+    if stacked:
+        w_a = learner_mean(params)
+        sig_sq = learner_var(params)
+        t_hc = trace_hc(loss_fn, params, stacked_batch)
+    else:
+        w_a = params
+        sig_sq = jnp.zeros((), jnp.float32)
+        t_hc = jnp.zeros((), jnp.float32)
+
+    # superbatch gradient + per-shard minibatch gradients at w_a
+    g_shards = jax.vmap(jax.grad(loss_fn), in_axes=(None, 0))(w_a,
+                                                              stacked_batch)
+    g0 = learner_mean(g_shards)
+    g_norm_sq = tree_norm_sq(g0)
+
+    # gradient noise scale (unbiased minibatch-gradient variance over signal):
+    # sigma_mb^2 = (1/(n-1)) sum_j ||g_j - g0||^2 ; gns = sigma_mb^2 / ||g||^2
+    dev_sq = jax.vmap(lambda g_j: tree_norm_sq(
+        jax.tree_util.tree_map(jnp.subtract, g_j, g0)))(g_shards)
+    n = dev_sq.shape[0]
+    gns = jnp.sum(dev_sq) / max(n - 1, 1) / jnp.maximum(g_norm_sq, 1e-30)
+
+    k_lanczos, k_hutch = jax.random.split(key)
+    lcz = lanczos_pytree(loss_fn, w_a, stacked_batch, m=lanczos_iters,
+                         key=k_lanczos, reorth=reorth)
+    t_h = hutchinson_trace(loss_fn, w_a, stacked_batch, k_hutch,
+                           n_samples=hutchinson_samples)
+
+    return ProbeResult(
+        sharpness=sharpness(lcz),
+        trace_h=t_h,
+        trace_hc=t_hc,
+        sigma_w_sq=sig_sq,
+        grad_norm=jnp.sqrt(g_norm_sq),
+        gns=gns,
+        alpha_e_pred=predict_alpha_e(alpha, t_hc, sig_sq),
+    )
+
+
+def make_probe_fn(loss_fn: Callable, *, alpha: float, lanczos_iters: int = 8,
+                  hutchinson_samples: int = 4, stacked: bool = True,
+                  reorth: str = "pallas") -> Callable:
+    """Jitted (params, stacked_batch, key) -> ProbeResult."""
+    return jax.jit(partial(probe_landscape, loss_fn, alpha=alpha,
+                           lanczos_iters=lanczos_iters,
+                           hutchinson_samples=hutchinson_samples,
+                           stacked=stacked, reorth=reorth))
+
+
+def make_trainer_probe(loss_fn: Callable, *, alpha: float,
+                       lanczos_iters: int = 8, hutchinson_samples: int = 4,
+                       seed: int = 0, reorth: str = "pallas") -> Callable:
+    """Probe in MultiLearnerTrainer hook shape: (state, stacked_batch) -> ProbeResult.
+
+    The probe key is derived from the state's step so results are
+    reproducible without threading RNG through the trainer.
+    """
+    core = make_probe_fn(loss_fn, alpha=alpha, lanczos_iters=lanczos_iters,
+                         hutchinson_samples=hutchinson_samples, stacked=True,
+                         reorth=reorth)
+
+    def fn(state, stacked_batch):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), state.step)
+        return core(state.params, stacked_batch, key)
+    return fn

@@ -201,6 +201,44 @@ def make_ssgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh) -> Callable:
 
 
 # ---------------------------------------------------------------------------
+# landscape probe (sharded entry point, DESIGN §10)
+# ---------------------------------------------------------------------------
+
+def make_probe_step(api: ModelAPI, mesh, *, alpha: float, stacked: bool,
+                    lanczos_iters: int = 8,
+                    hutchinson_samples: int = 4) -> Callable:
+    """(params, batch, key) -> landscape.ProbeResult under the mesh.
+
+    The HVPs are plain jvp-of-grad through ``api.loss_fn``, so under jit
+    they inherit exactly the step's parameter/activation shardings — no
+    extra sharding rules.  ``stacked`` mirrors the train-step layout:
+    True for DPSGD/AD-PSGD ((L, ...) params — covariance terms measured
+    across learners), False for the SSGD path (single replica — the
+    spread terms are 0 and the probe feeds the AutoLR controller with
+    sharpness + gradient noise scale only).
+
+    One SPMD caveat: the Lanczos basis lives on the flat (T, 128) view,
+    which XLA must regather from model-sharded params; the reorth loop
+    therefore runs through the jnp oracle (``reorth='ref'``) so the probe
+    stays a legal single program on any mesh.  At probe cadence (every
+    10-100 steps) the regather is noise; the fused Pallas path is for the
+    research trainer and single-device probes.
+    """
+    L = n_learners(mesh)
+
+    def probe(params, batch, key):
+        stacked_batch = jax.tree_util.tree_map(
+            lambda x: x.reshape((L, x.shape[0] // L) + x.shape[1:]), batch)
+        from ..landscape import probe_landscape
+        return probe_landscape(api.loss_fn, params, stacked_batch, key,
+                               alpha=alpha, lanczos_iters=lanczos_iters,
+                               hutchinson_samples=hutchinson_samples,
+                               stacked=stacked, reorth="ref")
+
+    return probe
+
+
+# ---------------------------------------------------------------------------
 # serving
 # ---------------------------------------------------------------------------
 

@@ -14,9 +14,11 @@ from .sgd import sgd
 from .adam import adam
 from .lamb import lamb
 from .decentlam import decentlam
-from .schedules import (constant_schedule, linear_warmup, step_decay,
+from .schedules import (constant_schedule, controller_scale, linear_warmup,
+                        scale_by_controller, set_controller_scale, step_decay,
                         warmup_linear_scale)
 
 __all__ = ["Optimizer", "apply_updates", "sgd", "adam", "lamb", "decentlam",
            "constant_schedule", "linear_warmup", "step_decay",
-           "warmup_linear_scale", "scale_by_schedule"]
+           "warmup_linear_scale", "scale_by_schedule", "scale_by_controller",
+           "set_controller_scale", "controller_scale"]

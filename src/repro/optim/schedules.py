@@ -1,7 +1,11 @@
-"""Learning-rate schedules used by the paper's recipes."""
+"""Learning-rate schedules used by the paper's recipes, plus the
+controller-driven scale adapter for the closed-loop AutoLR path."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+from .base import Optimizer
 
 
 def constant_schedule(value: float = 1.0):
@@ -25,6 +29,54 @@ def step_decay(boundaries, values):
         idx = jnp.sum(step >= bs)
         return vs[idx]
     return f
+
+
+def scale_by_controller(opt: Optimizer) -> Optimizer:
+    """Wrap an optimizer so its updates are multiplied by a *mutable* scale.
+
+    Schedules are pure functions of the step; a controller (e.g.
+    landscape.AutoLRController) is host-side state that changes at probe
+    cadence.  The scale therefore lives in the optimizer state where the
+    jitted step can read it, and the host writes it between steps with
+    ``set_controller_scale`` — one compiled train step serves every scale
+    value (no retrace).  Composes with scale_by_schedule (wrap either way).
+    """
+    def init(params):
+        return {"inner": opt.init(params), "scale": jnp.ones((), jnp.float32)}
+
+    def update(grads, state, params, *extra):
+        upd, inner = opt.update(grads, state["inner"], params, *extra)
+        upd = jax.tree_util.tree_map(lambda u: state["scale"] * u, upd)
+        return upd, {"inner": inner, "scale": state["scale"]}
+
+    return Optimizer(init, update, wants_mixed=opt.wants_mixed)
+
+
+def set_controller_scale(opt_state, scale):
+    """Functionally write the controller's multiplier into a (possibly
+    vmapped/stacked) scale_by_controller state.
+
+    Descends through ``"inner"`` wrappers so it finds the controller layer
+    regardless of wrap order (e.g. scale_by_schedule around
+    scale_by_controller or vice versa)."""
+    if "scale" in opt_state:
+        s = opt_state["scale"]
+        new = jnp.broadcast_to(jnp.asarray(scale, s.dtype), s.shape)
+        return {**opt_state, "scale": new}
+    if "inner" in opt_state:
+        return {**opt_state,
+                "inner": set_controller_scale(opt_state["inner"], scale)}
+    raise KeyError("no scale_by_controller layer in this optimizer state")
+
+
+def controller_scale(opt_state) -> jnp.ndarray:
+    """Read back the current multiplier (stacked states return (n,));
+    descends through ``"inner"`` wrappers like set_controller_scale."""
+    if "scale" in opt_state:
+        return opt_state["scale"]
+    if "inner" in opt_state:
+        return controller_scale(opt_state["inner"])
+    raise KeyError("no scale_by_controller layer in this optimizer state")
 
 
 def warmup_linear_scale(warmup_steps: int, scale: float,

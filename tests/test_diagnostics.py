@@ -55,6 +55,26 @@ def test_delta2_positive_for_nonquadratic_loss():
     assert float(stats.delta_2) > 1e-4
 
 
+def test_delta_s_analytic_on_quadratic():
+    """App. B normalization: Delta_S = alpha^2 sigma_mb^2 / n with the
+    UNBIASED sample estimate of the minibatch-gradient variance, i.e.
+    Delta_S = alpha^2 sum_j ||g_j(w_a) - g0||^2 / (n (n-1)).
+
+    For the quadratic L = 0.5||w - mu_batch||^2 the minibatch gradient at
+    w_a is w_a - mu_j, so the deviations are exactly mu_bar - mu_j and
+    Delta_S is known in closed form from the batch means alone.
+    """
+    n, d, alpha = 4, 16, 0.3
+    key = jax.random.PRNGKey(3)
+    ws = jax.random.normal(key, (n, d))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n, 8, d))
+    stats = compute_diagnostics(quad_loss, {"w": ws}, {"x": x}, alpha=alpha)
+    mus = jnp.mean(x, axis=1)                      # (n, d) minibatch means
+    dev = mus - jnp.mean(mus, axis=0, keepdims=True)
+    expected = alpha ** 2 * float(jnp.sum(dev ** 2)) / (n * (n - 1))
+    np.testing.assert_allclose(float(stats.delta_s), expected, rtol=1e-5)
+
+
 def test_trainer_diag_shapes():
     def loss_fn(p, b):
         return jnp.mean((b["x"] @ p["w"]) ** 2)

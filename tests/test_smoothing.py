@@ -1,7 +1,9 @@
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.smoothing import estimate_smoothness, smoothed_loss
+from repro.landscape import hvp
 
 
 def rough_loss(params, batch):
@@ -20,6 +22,29 @@ def test_smoothed_landscape_is_smoother():
     ls_smooth = estimate_smoothness(rough_loss, params, batch, key, sigma=0.3,
                                     n_pairs=6, probe_radius=0.02, n_mc=32)
     assert float(ls_smooth) < float(ls_raw)
+
+
+def test_smoothness_pins_quadratic_lipschitz():
+    """For L = 0.5 lam ||w||^2 the gradient map is exactly lam-Lipschitz:
+    ||g(x) - g(y)|| / ||x - y|| == lam for EVERY probe pair, so the (now
+    vmapped) estimator must return lam to float precision.  The same
+    quadratic doubles as the HVP cross-check: H v == lam v."""
+    lam = 3.7
+    params = {"w": jnp.ones((24,))}
+    batch = {"x": jnp.zeros((1,))}
+
+    def quad(p, b):
+        return 0.5 * lam * jnp.sum(p["w"] ** 2) + 0.0 * jnp.sum(b["x"])
+
+    ls = estimate_smoothness(quad, params, batch, jax.random.PRNGKey(2),
+                             sigma=0.0, n_pairs=8, probe_radius=0.1)
+    np.testing.assert_allclose(float(ls), lam, rtol=1e-4)
+
+    # HVP cross-check fixture: the curvature the probe engine would measure
+    v = {"w": jnp.linspace(-1.0, 1.0, 24)}
+    hv = hvp(lambda p: quad(p, batch), params, v)
+    np.testing.assert_allclose(np.asarray(hv["w"]), lam * np.asarray(v["w"]),
+                               rtol=1e-5)
 
 
 def test_smoothed_loss_above_min_for_convex():
