@@ -9,8 +9,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import gossip_mix_update, ref, reorth_pass
+from repro.kernels import (flat_gossip_update, gossip_mix_update, ref,
+                           reorth_pass)
 from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ops import dpsgd_fused_update
 
 from .common import write_table
 
@@ -42,6 +44,37 @@ def main():
     unfused = (1 + K + 1) * 4 + (1 + 1) * 4 + (2 + 1) * 4   # per elem bytes
     fused = (1 + K + 1 + 1) * 4 + 2 * 4
     rows.append(["gossip_mix", us_ref, us_int, unfused / fused])
+
+    # end-to-end engine step: the per-call flatten wrapper (re-flattens every
+    # pytree on every call — the pre-PR3 hot-path overhead) vs the flat
+    # engine's persistent (n, T, 128) store feeding the batched update
+    # directly (DESIGN §11).  Timing this end to end keeps the removed
+    # flatten regression visible if it ever sneaks back.
+    n = 4
+    tree = {"w1": jax.random.normal(ks[0], (512, 96)),
+            "b1": jnp.ones((96,)),
+            "w2": jax.random.normal(ks[1], (96, 48))}
+    nbr = jax.tree_util.tree_map(lambda x: x + 1.0, tree)
+    gt = jax.tree_util.tree_map(jnp.ones_like, tree)
+    mt = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    us_wrap = timeit(lambda *a: dpsgd_fused_update(
+        *a, [0.5, 0.5], lr=0.1, beta=0.9)[0]["w1"], tree, [nbr], gt, mt)
+    from repro.core.flatstate import flat_meta
+    meta = flat_meta(tree)
+    Tn = meta.rows
+    wf = jax.random.normal(ks[2], (n, Tn, 128))
+    gf = jnp.ones((n, Tn, 128))
+    mf = jnp.zeros((n, Tn, 128))
+    partners = jnp.array([[1, 0, 3, 2]], jnp.int32)
+    coefs = jnp.tile(jnp.array([0.5, 0.5, 1.0, 1.0], jnp.float32), (n, 1))
+    flat_step = jax.jit(lambda w, g, mu: flat_gossip_update(
+        w, w, g, mu, partners, coefs, lr=0.1, beta=0.9, backend="pallas")[0])
+    us_flat = timeit(flat_step, wf, gf, mf)
+    # traffic model, K=1: wrapper re-flattens {w, nbr, g, mu} (2 passes
+    # each) + kernel (4r+2w) + unflattens {w, mu} (2 passes each) vs the
+    # persistent store's bare kernel passes
+    rows.append(["gossip_mix_e2e", us_wrap, us_flat / n,
+                 (2 * 4 + 6 + 2 * 2) / 6])
 
     # Lanczos full-reorth sweep (landscape probe inner loop, DESIGN §10):
     # fused dots+axpy streams {V, w} once per pass vs once per basis vector

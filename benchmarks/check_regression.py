@@ -1,0 +1,81 @@
+"""Perf-regression gate for the flat-state engine (DESIGN §11).
+
+Reads the BENCH_PR3.json emitted by benchmarks.bench_throughput and fails
+(non-zero exit) unless, for every algorithm that ships with the flat
+engine as its default (DPSGD/AD-PSGD):
+
+  * flat-engine us/step stays within the measured CPU parity-noise band of
+    the pytree path (TOLERANCE below — what "no slower" means on a host
+    where the two engines sit at parity and the flat win is HBM traffic on
+    real accelerators), and
+  * the traced flat step's largest concatenate stays far below the
+    parameter count (the per-step re-flatten must not sneak back in), and
+  * the flat path actually dispatched the fused kernel.
+
+Timings come from bench_throughput's chunk-interleaved paired runs.  On
+CPU the two engines sit at parity: the flat engine's fused update and scan
+driver pay back the flat<->tree layout bridge (unflatten views forward,
+cotangent scatter backward, ~0.8 ms/step at smoke scale) and repeated
+measurement lands within a ±10% noise band around 1.0 — the decisive flat
+win (one HBM pass over {w, remote, g, mu} instead of many) needs actual
+memory-bandwidth-bound hardware.  TOLERANCE is set to that measured CPU
+noise band: a REAL regression — the old per-call re-flatten was ~3x on the
+e2e microbench, a reintroduced per-step flatten costs ~2 extra full passes
+— blows far past it, while parity jitter does not flake CI.
+
+Usage:
+    python -m benchmarks.check_regression [path/to/BENCH_PR3.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from .common import RESULTS
+
+TOLERANCE = 1.15          # measured CPU parity noise band on the <= gate
+CONCAT_FRACTION = 0.25    # step concats must stay << n_elem (RNG-sized)
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    path = argv[0] if argv else os.path.join(RESULTS, "BENCH_PR3.json")
+    with open(path) as f:
+        payload = json.load(f)
+
+    n_elem = payload["config"]["n_elem"]
+    errors = []
+    for algo, r in payload["algos"].items():
+        ratio = r["flat_over_pytree_ratio"]
+        gated = r.get("default_engine_flat", algo in ("dpsgd", "adpsgd"))
+        if ratio > TOLERANCE:
+            msg = (f"{algo}: flat engine SLOWER than pytree path "
+                   f"(paired ratio {ratio:.2f}, "
+                   f"{r['flat_us_per_step']:.0f} vs "
+                   f"{r['pytree_us_per_step']:.0f} us/step)")
+            if gated:
+                errors.append(msg)
+            else:   # reference measurement: algo ships on the pytree engine
+                print(f"note (ungated): {msg}")
+        if r["flat_step_max_concat_elems"] >= n_elem * CONCAT_FRACTION:
+            errors.append(
+                f"{algo}: parameter-sized concatenate back in the traced "
+                f"step ({r['flat_step_max_concat_elems']} elems, "
+                f"n_elem={n_elem})")
+        if gated and not r.get("fused_kernel"):
+            errors.append(f"{algo}: flat engine did not take the fused "
+                          "kernel path")
+        print(f"checked: {algo} flat {r['flat_us_per_step']:.0f} us/step vs "
+              f"pytree {r['pytree_us_per_step']:.0f} "
+              f"(paired speedup {r['flat_speedup']:.2f}x"
+              f"{', gated' if gated else ''}), "
+              f"concat {r['flat_step_max_concat_elems']} elems")
+
+    for e in errors:
+        print(f"PERF REGRESSION: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

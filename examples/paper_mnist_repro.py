@@ -38,7 +38,8 @@ def run(algo):
             d = tr.diagnostics(st, loader.batch(10_000 + i))
             acc_batch = loader.eval_batch(512)
             acc = float(jax.jit(fcnet.accuracy)(
-                jax.tree_util.tree_map(lambda x: x.mean(0), st.params),
+                jax.tree_util.tree_map(lambda x: x.mean(0),
+                                       tr.params_tree(st)),
                 acc_batch))
             rows.append([algo, i, float(m.loss), float(d.alpha_e),
                          float(d.sigma_w_sq), float(d.delta_s),

@@ -57,12 +57,17 @@ def main():
     key = jax.random.PRNGKey(0)
     state = trainer.init(key, api.init(key))
 
+    def ckpt_tree(st):
+        # checkpoint the pytree VIEW so checkpoints stay layout-stable
+        # across trainer engines (the flat engine stores (n, T, 128))
+        v = trainer.state_view(st)
+        return {"params": v.params, "opt": v.opt_state}
+
     if latest_step(args.ckpt_dir) is not None:
-        tree, step0 = restore_checkpoint(args.ckpt_dir,
-                                         {"params": state.params,
-                                          "opt": state.opt_state})
-        state = state._replace(params=tree["params"], opt_state=tree["opt"],
-                               step=jnp.int32(step0))
+        tree, step0 = restore_checkpoint(args.ckpt_dir, ckpt_tree(state))
+        state = trainer.state_from_view(state._replace(
+            params=tree["params"], opt_state=tree["opt"]))
+        state = state._replace(step=jnp.int32(step0))
         print(f"resumed from step {step0}")
 
     t0 = time.time()
@@ -73,12 +78,10 @@ def main():
             print(f"step {i:4d}  loss {float(m.loss):.4f}  "
                   f"sigma_w^2 {float(m.sigma_w_sq):.2e}  {dt:.1f}s/step")
         if args.ckpt_every and i and i % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, i, {"params": state.params,
-                                               "opt": state.opt_state})
+            save_checkpoint(args.ckpt_dir, i, ckpt_tree(state))
     heldout = float(trainer.eval_loss(state, loader.eval_batch(8)))
     print(f"heldout loss: {heldout:.4f}")
-    save_checkpoint(args.ckpt_dir, args.steps, {"params": state.params,
-                                                "opt": state.opt_state})
+    save_checkpoint(args.ckpt_dir, args.steps, ckpt_tree(state))
     print(f"checkpoint saved to {args.ckpt_dir}")
 
 

@@ -5,6 +5,7 @@ from .dpsgd import (AlgoConfig, mix_einsum, mix_ppermute_ring,
 from .topology import (full_matrix, ring_matrix, torus_matrix, pair_partners,
                        random_pair_matrix, hierarchical_matrix,
                        is_doubly_stochastic, spectral_gap, make_mixing_fn)
+from .flatstate import FlatMeta, flat_meta, max_concat_elems
 from .trainer import MultiLearnerTrainer, ProbeHook, TrainState, StepMetrics
 from .diagnostics import DiagStats, compute_diagnostics
 from .smoothing import smoothed_loss, estimate_smoothness
@@ -16,7 +17,7 @@ __all__ = [
     "full_matrix", "ring_matrix", "torus_matrix", "random_pair_matrix",
     "hierarchical_matrix", "is_doubly_stochastic", "spectral_gap",
     "make_mixing_fn", "MultiLearnerTrainer", "ProbeHook", "TrainState",
-    "StepMetrics",
+    "StepMetrics", "FlatMeta", "flat_meta", "max_concat_elems",
     "DiagStats", "compute_diagnostics", "smoothed_loss", "estimate_smoothness",
     "learner_mean", "learner_var",
 ]

@@ -38,9 +38,11 @@ import jax
 import jax.numpy as jnp
 
 from . import topology as topo
+from .flatstate import flat_meta
 from .util import tree_gaussian_like, learner_mean
 
 __all__ = ["AlgoConfig", "mix_einsum", "mix_ppermute_ring", "mix_ppermute_pair",
+           "mix_ppermute_ring_flat", "mix_ppermute_pair_flat",
            "perturb_weights", "pair_partners", "mix_pair_gather",
            "straggler_active_mask"]
 
@@ -139,6 +141,63 @@ def mix_ppermute_pair(stacked, axis_names, step, remote=None):
     def _mix(x, r):
         return jax.lax.switch(step % log_n, branches, (x, r))
     return jax.tree_util.tree_map(_mix, stacked, remote)
+
+
+def mix_ppermute_ring_flat(stacked, axis_names, self_weight: float = 1.0 / 3.0):
+    """Ring gossip on the flat (T_local, 128) view of the LOCAL shard.
+
+    Same semantics as mix_ppermute_ring, but the whole parameter shard is
+    permuted as ONE lane-aligned buffer instead of one collective per leaf:
+    2 collective-permutes total.  The buffer is flattened in the params'
+    own wire dtype (a uniformly-bf16 model moves 2 bytes/element over the
+    links, exactly like the per-leaf path; only a mixed-dtype tree falls
+    back to f32), and the averaging arithmetic runs in f32 either way.
+    Call inside shard_map; leaves have NO learner dim locally (the learner
+    axis is the mesh axis itself).
+    """
+    meta = flat_meta(stacked)
+    v = meta.flatten(stacked, dtype=meta.wire_dtype())
+    n = jax.lax.psum(1, axis_names)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+    side = (1.0 - self_weight) / 2.0
+    left = jax.lax.ppermute(v, axis_names, fwd)
+    right = jax.lax.ppermute(v, axis_names, bwd)
+    mixed = (self_weight * v.astype(jnp.float32)
+             + side * (left.astype(jnp.float32) + right.astype(jnp.float32)))
+    return meta.unflatten(mixed)
+
+
+def mix_ppermute_pair_flat(stacked, axis_names, step, remote=None):
+    """Pairwise hypercube gossip on the flat (T_local, 128) view.
+
+    Flat-store variant of mix_ppermute_pair: ONE collective-permute moving
+    one lane-aligned buffer per step (DESIGN §11), in the params' own wire
+    dtype (see mix_ppermute_ring_flat).  ``remote`` is the tree the
+    partner's contribution is read from (stale published buffer for
+    AD-PSGD; defaults to the live weights).
+    """
+    n = jax.lax.psum(1, axis_names)
+    assert n & (n - 1) == 0, "pairwise ppermute gossip needs power-of-two learners"
+    import math
+    log_n = int(math.log2(n))
+    meta = flat_meta(stacked)
+    wire = meta.wire_dtype()
+    v = meta.flatten(stacked, dtype=wire)
+    r = v if remote is None else flat_meta(remote).flatten(remote, dtype=wire)
+
+    def make_branch(bit):
+        perm = [(i, i ^ (1 << bit)) for i in range(n)]
+
+        def _b(xr):
+            x, rr = xr
+            other = jax.lax.ppermute(rr, axis_names, perm)
+            return 0.5 * (x.astype(jnp.float32) + other.astype(jnp.float32))
+        return _b
+
+    branches = [make_branch(b) for b in range(log_n)]
+    mixed = jax.lax.switch(step % log_n, branches, (v, r))
+    return meta.unflatten(mixed)
 
 
 # ---------------------------------------------------------------------------

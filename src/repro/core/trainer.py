@@ -10,9 +10,23 @@ Semantics (paper Sec. 2 + Lian et al. 2018 for the async variant):
            ``slow_factor`` ticks.  Modeled with explicit per-learner
            buffer/age/clock state so the step stays one jitted function.
 
-State always carries *stacked* params (leading learner axis n) so the
-algorithms are interchangeable and all diagnostics apply uniformly.  For SSGD
-the stacked copies stay bitwise identical (asserted in tests).
+Two interchangeable engines (DESIGN §11):
+
+  * ``engine='flat'`` (the default for DPSGD/AD-PSGD) keeps the stacked
+    parameters as ONE persistent (n, T, 128) f32 buffer (core/flatstate.py),
+    flattened exactly once at init.  Gradients are taken with respect to the
+    flat buffer through cheap per-leaf unflatten views, the gossip + SGD
+    update runs as the batched Pallas kernel (kernels/ops.flat_gossip_update,
+    jnp ``ref`` oracle selectable), and no parameter-sized concatenate ever
+    appears in the traced step (guard-tested).
+  * ``engine='pytree'`` is the paper-faithful reference: stacked pytrees and
+    unfused tree_map updates.  The flat engine is pinned against it by
+    parity tests (tests/test_flat_engine.py).
+
+``train_step`` and the ``run_steps`` lax.scan driver donate the state
+argument (the old buffers are reused in place — do not touch a state after
+passing it in).  Probe/diagnostic jits deliberately do NOT donate: the state
+outlives a measurement pass by construction.
 
 This module is the CPU-scale research path (vmap over learners on one
 device).  The production pjit/shard_map path lives in repro/launch/train.py
@@ -31,12 +45,13 @@ from . import topology as topo
 from .diagnostics import DiagStats, compute_diagnostics
 from .dpsgd import (AlgoConfig, mean_broadcast, mix_einsum, mix_pair_gather,
                     pair_partners, perturb_weights, straggler_active_mask)
+from .flatstate import LANE, FlatMeta, flat_meta
 from .util import learner_mean, learner_var
 from ..optim import Optimizer, apply_updates
 
 
 class TrainState(NamedTuple):
-    params: Any           # stacked: leaves (n, ...)
+    params: Any           # stacked: leaves (n, ...) — or (n, T, 128) flat
     opt_state: Any        # stacked per-learner
     step: jnp.ndarray
     rng: jax.Array
@@ -85,6 +100,8 @@ class MultiLearnerTrainer:
     algo: AlgoConfig
     alpha_for_diag: float = 1.0   # alpha used in the alpha_e instrument
     hooks: list = dataclasses.field(default_factory=list)  # [ProbeHook]
+    engine: str = "auto"       # auto | flat | pytree (DESIGN §11)
+    kernel_backend: str = "auto"   # auto | pallas | ref (flat-engine dispatch)
 
     def __post_init__(self):
         self._mix_fn = topo.make_mixing_fn(self.algo.topology, self.algo.n_learners)
@@ -92,16 +109,133 @@ class MultiLearnerTrainer:
                 and self.algo.gossip_order != "mix_then_descend"):
             raise ValueError("decentlam-style optimizers need the gossip "
                              "average: use gossip_order='mix_then_descend'")
-        # jit once per trainer instance (self is not hashable -> close over it)
-        self.train_step = jax.jit(self._train_step)
+        assert self.engine in ("auto", "flat", "pytree"), self.engine
+        assert self.kernel_backend in ("auto", "pallas", "ref"), \
+            self.kernel_backend
+        layout_sensitive = getattr(self.optimizer, "layout_sensitive", False)
+        if self.engine == "auto":
+            # the flat fused engine is the default hot path for the
+            # decentralized algorithms; SSGD/SSGD* keep the reference layout
+            # (no gossip to fuse; SSGD* draws per-leaf weight noise), and so
+            # does a layout-sensitive optimizer (lamb's layer-wise trust
+            # ratio would silently collapse on the single flat leaf)
+            self._flat = (self.algo.algo in ("dpsgd", "adpsgd")
+                          and not layout_sensitive)
+        else:
+            if self.engine == "flat" and self.algo.algo == "ssgd_star":
+                raise ValueError("ssgd_star draws per-leaf weight noise; "
+                                 "use engine='pytree'")
+            if self.engine == "flat" and layout_sensitive:
+                raise ValueError(
+                    "this optimizer's update depends on the per-leaf "
+                    "structure (layout_sensitive=True, e.g. lamb's "
+                    "layer-wise trust ratio) — the flat engine would "
+                    "silently change its semantics; use engine='pytree'")
+            self._flat = self.engine == "flat"
+        # fused kernel path: plain (momentum-)SGD on a pairwise/ring gossip
+        # schedule (SSGD has no gossip to fuse — its flat step is generic)
+        f = getattr(self.optimizer, "fused", None)
+        self._fused = None
+        if (self._flat and f is not None
+                and self.algo.algo in ("dpsgd", "adpsgd")
+                and not getattr(self.optimizer, "wants_mixed", False)
+                and self.algo.gossip_order == "mix_then_descend"
+                and (self.algo.topology == "random_pair"
+                     or (self.algo.topology == "ring"
+                         and self.algo.n_learners >= 3))):
+            self._fused = f
+        self._meta: Optional[FlatMeta] = None   # set at init()
+        # jit once per trainer instance (self is not hashable -> close over
+        # it).  The step and the scan driver donate the state: the flat
+        # buffers are updated in place, so a consumed state must not be
+        # reused (tests pin this).
+        self.train_step = jax.jit(self._train_step, donate_argnums=(0,))
+        self._run_steps_jit = jax.jit(self._run_steps, donate_argnums=(0,))
         self.diagnostics = jax.jit(self._diagnostics)
         self.eval_loss = jax.jit(self._eval_loss)
+
+    # -- engine helpers -------------------------------------------------------
+    @property
+    def is_flat(self) -> bool:
+        return self._flat
+
+    def _params_any(self, params):
+        """Accept either layout: unflatten a flat buffer, pass trees through."""
+        if self._flat and isinstance(params, jax.Array):
+            return self._meta.unflatten(params)
+        return params
+
+    def params_tree(self, state_or_params):
+        """The stacked parameter pytree view of a state (cheap slices)."""
+        p = (state_or_params.params if isinstance(state_or_params, TrainState)
+             else state_or_params)
+        return self._params_any(p)
+
+    def state_view(self, state: TrainState) -> TrainState:
+        """Pytree-layout view of a (possibly flat) state.
+
+        Parameters/buffer and any (n, T, 128) optimizer leaves (momentum)
+        come back as stacked pytrees; scalar opt leaves (controller scale,
+        schedule step) pass through.  Probe hooks receive this view so
+        measurement code is engine-agnostic.
+        """
+        if not self._flat:
+            return state
+        meta = self._meta
+
+        def leafview(x):
+            if (isinstance(x, jax.Array) and x.ndim >= 2
+                    and x.shape[-2:] == (meta.rows, LANE)):
+                return meta.unflatten(x)
+            return x
+
+        return state._replace(
+            params=meta.unflatten(state.params),
+            buffer=(None if state.buffer is None
+                    else meta.unflatten(state.buffer)),
+            opt_state=jax.tree_util.tree_map(leafview, state.opt_state))
+
+    def state_from_view(self, view: TrainState) -> TrainState:
+        """Inverse of ``state_view``: re-flatten a pytree-layout state.
+
+        Lets checkpoints stay layout-stable across engines: save
+        ``state_view(state)``, restore it with the view as template, and
+        feed the result back through here.  Any subtree matching the
+        parameter structure (params, buffer, momentum leaves the view
+        expanded) is flattened back into the (n, T, 128) store; everything
+        else passes through.
+        """
+        if not self._flat:
+            return view
+        meta = self._meta
+
+        def is_param_subtree(x):
+            try:
+                return jax.tree_util.tree_structure(x) == meta.treedef
+            except Exception:
+                return False
+
+        def reflatten(x):
+            return meta.flatten(x) if is_param_subtree(x) else x
+
+        return view._replace(
+            params=meta.flatten(view.params),
+            buffer=(None if view.buffer is None
+                    else meta.flatten(view.buffer)),
+            opt_state=jax.tree_util.tree_map(reflatten, view.opt_state,
+                                             is_leaf=is_param_subtree))
+
+    def _loss_flat(self, w_flat, batch):
+        return self.loss_fn(self._meta.unflatten(w_flat), batch)
 
     # -- init ---------------------------------------------------------------
     def init(self, key: jax.Array, params_single) -> TrainState:
         n = self.algo.n_learners
         stacked = jax.tree_util.tree_map(
             lambda p: jnp.broadcast_to(p[None], (n,) + p.shape).copy(), params_single)
+        if self._flat:
+            self._meta = flat_meta(params_single)
+            stacked = self._meta.flatten(stacked)   # the ONE flatten
         opt_state = jax.vmap(self.optimizer.init)(stacked)
         buffer = age = clock = None
         if self.algo.algo == "adpsgd":
@@ -118,9 +252,76 @@ class MultiLearnerTrainer:
                                                    mixed)
         return jax.vmap(self.optimizer.update)(grads, opt_state, params)
 
+    # -- flat-engine pieces ---------------------------------------------------
+    def _pair_coefs(self, partner):
+        """(n, 2) [self, neighbor] mixing weights; solo learners keep w."""
+        solo = partner == jnp.arange(partner.shape[0])
+        self_c = jnp.where(solo, 1.0, 0.5).astype(jnp.float32)
+        return jnp.stack([self_c, 1.0 - self_c], axis=1)
+
+    def _fused_step(self, w, remote, grads, opt_state, partners, coefs,
+                    active=None, buffer=None, nbr_fresh=None, publish=None):
+        """Dispatch the batched gossip+SGD kernel and thread the opt state.
+
+        ``active`` (adpsgd): the kernel applies the straggler select to the
+        weights and momentum in the same pass; the caller reverts the small
+        non-flat opt leaves with ``_select_nonflat``.  ``buffer`` +
+        ``nbr_fresh``/``publish`` switch on the AD-PSGD publish mode: the
+        stale-remote select and the published-buffer rewrite also happen
+        inside the kernel, so the tick makes one pass over the parameters.
+        Returns (w_new, opt_state[, buffer_new]).
+        """
+        from ..kernels import ops as kops
+        f = self._fused
+        n = w.shape[0]
+        scale = jnp.broadcast_to(
+            jnp.asarray(f.scale(opt_state), jnp.float32), (n,))
+        act = (jnp.ones((n,), jnp.float32) if active is None
+               else active.astype(jnp.float32))
+        cols = [coefs, scale[:, None], act[:, None]]
+        if buffer is not None:
+            cols += [nbr_fresh.astype(jnp.float32)[:, None],
+                     publish.astype(jnp.float32)[:, None]]
+        coefs = jnp.concatenate(cols, axis=1)
+        mu = f.read_mu(opt_state)
+        out = kops.flat_gossip_update(
+            w, remote, grads, mu, partners, coefs, lr=f.lr, beta=f.beta,
+            weight_decay=f.weight_decay, buffer=buffer,
+            backend=self.kernel_backend)
+        w_new, mu_new = out[0], out[1]
+        opt_state = f.bump(opt_state)
+        if mu_new is not None:
+            opt_state = f.write_mu(opt_state, mu_new)
+        if buffer is not None:
+            return w_new, opt_state, out[2]
+        return w_new, opt_state
+
+    def _select_nonflat(self, mask, new, old):
+        """Per-learner select skipping (T, 128) leaves the kernel already
+        selected in-pass (the momentum buffer)."""
+        meta = self._meta
+
+        def _sel(a, b):
+            if (isinstance(a, jax.Array) and a.ndim >= 2
+                    and a.shape[-2:] == (meta.rows, LANE)):
+                return a
+            m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
+            return jnp.where(m, a, b)
+        return jax.tree_util.tree_map(_sel, new, old)
+
+    def _mix_flat(self, w, key):
+        if self.algo.topology == "random_pair":
+            return mix_pair_gather(w, pair_partners(key, self.algo.n_learners))
+        return mix_einsum(w, self._mix_fn(key))
+
     # -- one training step ----------------------------------------------------
     def _train_step(self, state: TrainState, stacked_batch):
         """stacked_batch leaves: (n, B_local, ...)."""
+        if self._flat:
+            return self._train_step_flat(state, stacked_batch)
+        return self._train_step_tree(state, stacked_batch)
+
+    def _train_step_tree(self, state: TrainState, stacked_batch):
         algo = self.algo
         key = jax.random.fold_in(state.rng, state.step)
         k_mix, k_noise = jax.random.split(key)
@@ -228,6 +429,135 @@ class MultiLearnerTrainer:
         return TrainState(new_params, opt_state, state.step + 1, state.rng,
                           buffer=buffer, age=age, clock=clock), metrics
 
+    def _train_step_flat(self, state: TrainState, stacked_batch):
+        """The flat-engine step: same algorithm semantics, (n, T, 128) state.
+
+        Gradients are taken with respect to the flat buffer (chain rule
+        through the unflatten views — their transpose is pad-and-add), so no
+        parameter-sized flatten/concatenate is traced; the fused path then
+        streams {w, remote, g, mu} through the batched Pallas kernel once.
+        """
+        algo = self.algo
+        n = algo.n_learners
+        key = jax.random.fold_in(state.rng, state.step)
+        k_mix, _ = jax.random.split(key)
+
+        grad_fn = jax.value_and_grad(self._loss_flat)
+        zero = jnp.zeros((), jnp.float32)
+        stale_mean, stale_max = zero, zero
+        buffer, age, clock = state.buffer, state.age, state.clock
+        w = state.params
+
+        if algo.algo == "ssgd":
+            w_a = jnp.mean(w, axis=0)
+            losses, grads = jax.vmap(grad_fn, in_axes=(None, 0))(w_a,
+                                                                 stacked_batch)
+            g_mean = jnp.mean(grads, axis=0)
+            g_stacked = jnp.broadcast_to(g_mean[None], w.shape)
+            updates, opt_state = self._opt_update(g_stacked, state.opt_state,
+                                                  w, w)
+            new_params = apply_updates(w, updates)
+            new_params = jnp.broadcast_to(jnp.mean(new_params, axis=0)[None],
+                                          w.shape)
+
+        elif algo.algo == "dpsgd":
+            losses, grads = jax.vmap(grad_fn)(w, stacked_batch)
+            if self._fused is not None:
+                if algo.topology == "random_pair":
+                    partner = pair_partners(k_mix, n)
+                    partners = partner[None].astype(jnp.int32)
+                    coefs = self._pair_coefs(partner)
+                else:                                   # ring, n >= 3
+                    idx = jnp.arange(n, dtype=jnp.int32)
+                    partners = jnp.stack([(idx + 1) % n, (idx - 1) % n])
+                    coefs = jnp.tile(
+                        jnp.float32(1.0 / 3.0), (n, 3))
+                new_params, opt_state = self._fused_step(
+                    w, w, grads, state.opt_state, partners, coefs)
+            elif algo.gossip_order == "mix_then_descend":
+                mixed = self._mix_flat(w, k_mix)
+                updates, opt_state = self._opt_update(grads, state.opt_state,
+                                                      w, mixed)
+                new_params = apply_updates(mixed, updates)
+            else:                                       # descend_then_mix
+                updates, opt_state = self._opt_update(grads, state.opt_state,
+                                                      w, w)
+                new_params = self._mix_flat(apply_updates(w, updates), k_mix)
+
+        elif algo.algo == "adpsgd":
+            active = straggler_active_mask(state.step, n, algo.slow_learner,
+                                           algo.slow_factor)
+            fresh = age >= algo.max_staleness
+            stale_seen = jnp.where(fresh, 0, age)
+            stale_mean = jnp.mean(stale_seen.astype(jnp.float32))
+            stale_max = jnp.max(stale_seen).astype(jnp.float32)
+
+            losses, grads = jax.vmap(grad_fn)(w, stacked_batch)
+            partner = pair_partners(k_mix, n)
+            if self._fused is not None:
+                # publish-mode kernel: stale-remote select, straggler select
+                # AND the published-buffer rewrite all happen in the one
+                # parameter pass; only the small non-flat opt leaves (scale,
+                # schedule counters) still need the revert outside
+                new_params, opt_state_new, buffer = self._fused_step(
+                    w, w, grads, state.opt_state,
+                    partner[None].astype(jnp.int32), self._pair_coefs(partner),
+                    active=active, buffer=buffer,
+                    nbr_fresh=fresh[partner], publish=active | fresh)
+                opt_state = self._select_nonflat(active, opt_state_new,
+                                                 state.opt_state)
+            else:
+                remote = jnp.where(fresh[:, None, None], w, buffer)
+                mixed = mix_pair_gather(w, partner, remote)
+                updates, opt_state_new = self._opt_update(
+                    grads, state.opt_state, w, mixed)
+                stepped = apply_updates(mixed, updates)
+                new_params = jnp.where(active[:, None, None], stepped, w)
+                opt_state = _select(active, opt_state_new, state.opt_state)
+                buffer = jnp.where((active | fresh)[:, None, None],
+                                   new_params, buffer)
+            age = jnp.where(active | fresh, 0, age + 1)
+            clock = clock + active.astype(jnp.int32)
+        else:
+            raise ValueError(f"flat engine does not run {algo.algo}; "
+                             "use engine='pytree'")
+
+        g_mean = jnp.mean(grads, axis=0)
+        # centered two-pass variance on the single flat buffer: same value
+        # as the per-leaf learner_var (pads contribute exactly 0) at about
+        # half jnp.var's cost, and numerically safe at consensus (the
+        # E[x^2]-E[x]^2 shortcut is NOT — it cancels catastrophically there)
+        dev = new_params - jnp.mean(new_params, axis=0)
+        metrics = StepMetrics(
+            loss=jnp.mean(losses),
+            grad_norm=jnp.sqrt(jnp.sum(jnp.square(g_mean))),
+            sigma_w_sq=jnp.sum(jnp.square(dev)) / n,
+            staleness_mean=stale_mean,
+            staleness_max=stale_max,
+        )
+        return TrainState(new_params, opt_state, state.step + 1, state.rng,
+                          buffer=buffer, age=age, clock=clock), metrics
+
+    # -- multi-step scan driver (DESIGN §11) ----------------------------------
+    def _run_steps(self, state: TrainState, stacked_batches):
+        return jax.lax.scan(self._train_step, state, stacked_batches)
+
+    def run_steps(self, state: TrainState, stacked_batches, k: int = None):
+        """Run ``k`` fused steps under one lax.scan dispatch.
+
+        stacked_batches leaves: (k, n, B_local, ...) — k prefetched
+        minibatches per learner.  Returns (final state, StepMetrics with a
+        leading (k,) axis).  The state argument is donated; between probe
+        boundaries this is the preferred driver (no host round-trip per
+        step).  ``k`` is optional validation sugar.
+        """
+        if k is not None:
+            lead = jax.tree_util.tree_leaves(stacked_batches)[0].shape[0]
+            if lead != k:
+                raise ValueError(f"stacked_batches carry {lead} steps, "
+                                 f"expected k={k}")
+        return self._run_steps_jit(state, stacked_batches)
+
     # -- probe seam (replaces ad-hoc diag_every loops; DESIGN §10) ------------
     def add_probe(self, name: str, schedule, fn,
                   on_result: Optional[Callable] = None) -> None:
@@ -248,13 +578,22 @@ class MultiLearnerTrainer:
         loop counter can lag ``state.step`` (e.g. after a warm-up compile
         step) and silently firing on the wrong one would no-op the probes.
         Defaults to ``int(state.step)``.
+
+        Probe fns receive the pytree ``state_view`` (engine-agnostic
+        measurement code); ``on_result`` receives the REAL state so
+        controllers write straight into the live (possibly flat) optimizer
+        state.  Probes never donate the state — it outlives them.
         """
         step = int(state.step) if step is None else step
         results = {}
         for h in self.hooks:
             if not h.schedule.due(step):
                 continue
-            r = h.fn(state, stacked_batch)
+            # view rebuilt per hook: a later hook's fn must observe state an
+            # earlier hook's on_result already wrote (e.g. a controller
+            # scale) — state_view is the identity on the pytree engine and
+            # cheap slices on the flat one
+            r = h.fn(self.state_view(state), stacked_batch)
             results[h.name] = r
             if h.on_result is not None:
                 state = h.on_result(state, r)
@@ -262,10 +601,15 @@ class MultiLearnerTrainer:
 
     # -- diagnostics (paper Fig. 2b / Fig. 4) ---------------------------------
     def _diagnostics(self, state: TrainState, stacked_batch) -> DiagStats:
-        return compute_diagnostics(self.loss_fn, state.params, stacked_batch,
+        return compute_diagnostics(self.loss_fn,
+                                   self._params_any(state.params),
+                                   stacked_batch,
                                    self.alpha_for_diag, age=state.age)
 
     # -- eval ----------------------------------------------------------------
     def _eval_loss(self, state: TrainState, batch):
         """Loss of the average model on a (B, ...) batch (heldout metric)."""
+        if self._flat and isinstance(state.params, jax.Array):
+            w_a = self._meta.unflatten(jnp.mean(state.params, axis=0))
+            return self.loss_fn(w_a, batch)
         return self.loss_fn(learner_mean(state.params), batch)

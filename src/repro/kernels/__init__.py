@@ -1,9 +1,12 @@
-from .ops import flash_attention, dpsgd_fused_update, reorthogonalize
-from .gossip_mix import gossip_mix_update, flatten_for_kernel
+from .ops import (flash_attention, dpsgd_fused_update, flat_gossip_update,
+                  reorthogonalize)
+from .gossip_mix import (gossip_mix_update, gossip_mix_update_flat,
+                         flatten_for_kernel)
 from .flash_attention import flash_attention_fwd
 from .reorth import reorth_pass, reorth_dots, reorth_axpy
 from . import ref
 
-__all__ = ["flash_attention", "dpsgd_fused_update", "gossip_mix_update",
+__all__ = ["flash_attention", "dpsgd_fused_update", "flat_gossip_update",
+           "gossip_mix_update", "gossip_mix_update_flat",
            "flatten_for_kernel", "flash_attention_fwd", "reorthogonalize",
            "reorth_pass", "reorth_dots", "reorth_axpy", "ref"]

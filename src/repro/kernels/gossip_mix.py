@@ -26,6 +26,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core.flatstate import flat_meta
 
 LANE = 128
 BLOCK_ROWS = 256          # (256, 128) f32 block = 128 KiB / buffer in VMEM
@@ -57,8 +60,7 @@ def gossip_mix_update(w, neighbors, grads, momentum, coefs, *, lr: float,
     T, lane = w.shape
     assert lane == LANE, lane
     K = neighbors.shape[0]
-    rows = min(block_rows, T)
-    assert T % rows == 0, (T, rows)
+    rows = _pick_rows(T, block_rows)
     grid = (T // rows,)
 
     kern = functools.partial(_kernel, n_neighbors=K, lr=lr, beta=beta)
@@ -78,25 +80,196 @@ def gossip_mix_update(w, neighbors, grads, momentum, coefs, *, lr: float,
 
 
 # ---------------------------------------------------------------------------
+# batched (learner-major) kernel: the flat-engine hot path
+# ---------------------------------------------------------------------------
+#
+# One pallas_call updates ALL n learners: grid (n, T // rows), learner-major.
+# The K neighbor operands are not gathered on the host — the partner indices
+# ride in as scalar-prefetch operands and the neighbor BlockSpec index_map
+# reads its learner row straight out of the published/remote buffer
+# (``partners[k, i]``), so the only parameter-sized HBM traffic is the
+# streamed blocks themselves: (3 + K) reads + 2 writes per element, with the
+# momentum-SGD update (optional weight decay, per-learner lr scale for the
+# AutoLR controller) fused into the same pass.
+
+def _flat_kernel(part_ref, *refs, n_neighbors: int, lr: float, beta: float,
+                 weight_decay: float, has_momentum: bool, publish: bool):
+    """One (1, rows, LANE) tile of one learner.
+
+    refs layout:
+      w, nbr_w_0..K-1, [nbr_buf], g, [mu], [buf], coefs,
+      w_out, [mu_out], [buf_out]
+    coefs (SMEM): [self, neighbor..., controller scale, active] — plus, in
+    publish mode, [nbr_fresh, publish].
+
+    ``active`` (0/1) folds the AD-PSGD straggler select into the same pass:
+    an inactive learner's weights and momentum stream through unchanged
+    instead of costing two extra full-buffer select passes outside the
+    kernel (sync paths pass 1).  ``publish`` mode (AD-PSGD, K=1) further
+    folds the whole async tick in: the neighbor contribution is selected
+    between the partner's live weights and its stale published buffer
+    (``nbr_fresh``), and the learner's own published buffer is rewritten
+    in-pass (``publish`` flag = active | forced-fresh) — the tick touches
+    each parameter exactly once instead of three more select passes.
+    """
+    k = n_neighbors
+    it = iter(refs)
+    w_ref = next(it)
+    nbr_refs = [next(it) for _ in range(k)]
+    nbr_buf_ref = next(it) if publish else None
+    g_ref = next(it)
+    mu_ref = next(it) if has_momentum else None
+    buf_ref = next(it) if publish else None
+    coef_ref = next(it)
+    w_out = next(it)
+    mu_out = next(it) if has_momentum else None
+    buf_out = next(it) if publish else None
+
+    w = w_ref[0]
+    mixed = coef_ref[0, 0] * w
+    for j in range(k):
+        nbr = nbr_refs[j][0]
+        if publish:
+            nbr = jnp.where(coef_ref[0, 3 + k] > 0.5, nbr, nbr_buf_ref[0])
+        mixed += coef_ref[0, 1 + j] * nbr
+    g = g_ref[0]
+    if weight_decay:
+        g = g + weight_decay * w
+    lr_eff = lr * coef_ref[0, 1 + k]
+    # where, not arithmetic blend: a mid-divergence NaN in the discarded
+    # branch must not leak through 0 * NaN
+    active = coef_ref[0, 2 + k] > 0.5
+    if has_momentum:
+        mu = mu_ref[0]
+        mu_new = beta * mu + g
+        new_w = jnp.where(active, mixed - lr_eff * mu_new, w)
+        mu_out[0] = jnp.where(active, mu_new, mu)
+    else:
+        new_w = jnp.where(active, mixed - lr_eff * g, w)
+    w_out[0] = new_w
+    if publish:
+        buf_out[0] = jnp.where(coef_ref[0, 4 + k] > 0.5, new_w, buf_ref[0])
+
+
+def _pick_rows(T: int, block_rows: int) -> int:
+    """Largest sublane-aligned divisor of T that fits block_rows.
+
+    Flat-store T is always a multiple of 8 (flatstate.ROW_ALIGN), so an
+    8-aligned divisor exists (8 itself at worst); small ad-hoc T (tests,
+    tree wrapper) falls back to any divisor."""
+    r = min(block_rows, T)
+    while r > 8 and (T % r or r % 8):
+        r -= 1
+    while T % r:
+        r -= 1
+    return r
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lr", "beta", "weight_decay", "has_momentum",
+                              "interpret", "block_rows"))
+def gossip_mix_update_flat(w, remote, grads, momentum, partners, coefs, *,
+                           lr: float, beta: float = 0.0,
+                           weight_decay: float = 0.0,
+                           has_momentum: bool = True,
+                           buffer=None,
+                           interpret: bool = False,
+                           block_rows: int = BLOCK_ROWS):
+    """Batched fused gossip + SGD update on the persistent flat store.
+
+    w, grads: (n, T, 128) f32 live weights / gradients.
+    remote:   (n, T, 128) buffer neighbor contributions are read from (the
+              live weights for synchronous DPSGD — pass ``w`` itself to
+              alias them).
+    momentum: (n, T, 128) or ignored when ``has_momentum=False``.
+    partners: (K, n) int32 — neighbor learner index per schedule row
+              (pair matching: K=1; ring: K=2), consumed via scalar prefetch.
+    coefs:    (n, K + 3) f32 — [self, neighbor..., lr scale, active] per
+              learner: a solo learner carries [1, 0, ...]; ``lr scale`` is
+              the controller/schedule multiplier (one compiled kernel
+              serves every scale value); ``active`` (0/1) applies the
+              AD-PSGD straggler select in the same pass (1 for sync paths).
+    buffer:   (n, T, 128) published-weights buffer — enables the AD-PSGD
+              publish mode (K=1): coefs grows two columns [nbr_fresh,
+              publish]; the neighbor contribution reads
+              ``where(nbr_fresh, remote[partner], buffer[partner])`` and a
+              third output returns ``where(publish, w_new, buffer)`` — the
+              whole async tick in one parameter pass.
+    Returns (w_new, mu_new[, buffer_new]) — mu_new is ``momentum``
+    untouched when ``has_momentum=False``; buffer_new only in publish mode.
+    """
+    n, T, lane = w.shape
+    assert lane == LANE, lane
+    K = partners.shape[0]
+    publish = buffer is not None
+    ncoef = K + (5 if publish else 3)
+    assert not publish or K == 1, "publish mode is pairwise (AD-PSGD)"
+    assert partners.shape == (K, n), (partners.shape, n)
+    assert coefs.shape == (n, ncoef), (coefs.shape, K, publish)
+    rows = _pick_rows(T, block_rows)
+    grid = (n, T // rows)
+
+    block = pl.BlockSpec((1, rows, LANE), lambda i, j, p: (i, j, 0))
+
+    def nbr_spec(k):
+        return pl.BlockSpec((1, rows, LANE), lambda i, j, p: (p[k, i], j, 0))
+
+    coef_spec = pl.BlockSpec((1, ncoef), lambda i, j, p: (i, 0),
+                             memory_space=pltpu.SMEM)
+
+    kern = functools.partial(_flat_kernel, n_neighbors=K, lr=lr, beta=beta,
+                             weight_decay=weight_decay,
+                             has_momentum=has_momentum, publish=publish)
+    in_specs = [block] + [nbr_spec(k) for k in range(K)]
+    operands = [w] + [remote] * K
+    if publish:
+        in_specs.append(nbr_spec(0))
+        operands.append(buffer)
+    in_specs.append(block)
+    operands.append(grads)
+    out_shape = [jax.ShapeDtypeStruct((n, T, LANE), w.dtype)]
+    out_specs = [block]
+    if has_momentum:
+        in_specs.append(block)
+        operands.append(momentum)
+        out_shape.append(jax.ShapeDtypeStruct((n, T, LANE), jnp.float32))
+        out_specs.append(block)
+    if publish:
+        in_specs.append(block)
+        operands.append(buffer)
+        out_shape.append(jax.ShapeDtypeStruct((n, T, LANE), w.dtype))
+        out_specs.append(block)
+    in_specs.append(coef_spec)
+    operands.append(coefs)
+
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid,
+            in_specs=in_specs, out_specs=out_specs),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(partners, *operands)
+    mu_new = out[1] if has_momentum else momentum
+    if publish:
+        return out[0], mu_new, out[-1]
+    return out[0], mu_new
+
+
+# ---------------------------------------------------------------------------
 # pytree-level wrapper: flatten -> kernel -> unflatten
 # ---------------------------------------------------------------------------
 
 def flatten_for_kernel(tree):
-    """Pytree -> ((T,128) f32 view, unflatten_fn)."""
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
-    sizes = [l.size for l in leaves]
-    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
-    pad = (-flat.size) % LANE
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
-    view = flat.reshape(-1, LANE)
+    """Pytree -> ((T,128) f32 view, unflatten_fn).
 
-    def unflatten(view2):
-        flat2 = view2.reshape(-1)[:sum(sizes)]
-        out, off = [], 0
-        for l, sz in zip(leaves, sizes):
-            out.append(flat2[off:off + sz].reshape(l.shape).astype(l.dtype))
-            off += sz
-        return jax.tree_util.tree_unflatten(treedef, out)
-
-    return view, unflatten
+    Thin shim over core.flatstate.FlatMeta (used by landscape/lanczos.py and
+    the one-shot kernel wrappers): the metadata — per-leaf dtypes, sizes and
+    offsets — is computed once per structure and cached, so repeated calls
+    stop rebuilding offset lists; unflatten restores each leaf's original
+    dtype from that metadata.  The flatten itself still concatenates — the
+    flat *engine* (core/trainer.py) avoids even that by keeping the flat
+    buffer persistent across steps.
+    """
+    meta = flat_meta(tree)
+    return meta.flatten(tree), meta.unflatten

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention_fwd
-from .gossip_mix import gossip_mix_update, flatten_for_kernel
+from .gossip_mix import (flatten_for_kernel, gossip_mix_update,
+                         gossip_mix_update_flat)
 from .reorth import reorth_pass
 from . import ref
 
@@ -90,6 +91,44 @@ def reorthogonalize(basis, w, mask, *, backend: str = "pallas"):
     w, _ = reorth_pass(basis, w, mask, interpret=interpret)
     w, _ = reorth_pass(basis, w, mask, interpret=interpret)
     return w
+
+
+def flat_gossip_update(w, remote, grads, momentum, partners, coefs, *,
+                       lr: float, beta: float = 0.0, weight_decay: float = 0.0,
+                       buffer=None, backend: str = "auto"):
+    """Batched fused gossip+SGD update on the persistent (n, T, 128) store.
+
+    The flat engine's hot-path dispatch (DESIGN §11): ``backend='pallas'``
+    runs the learner-major Pallas kernel (Mosaic on TPU, interpret mode on
+    CPU); ``backend='ref'`` the jnp oracle — same contract, the ground
+    truth in tests.  ``'auto'`` (the default) picks the kernel on
+    accelerators and the oracle on CPU: interpret mode exists to *verify*
+    the kernel, not to win benchmarks, and the oracle is the faster correct
+    implementation where there is no Mosaic compiler.
+
+    momentum=None selects the momentum-free fused update (no (n, T, 128)
+    momentum buffer is read or written).  ``buffer`` (AD-PSGD) switches on
+    publish mode — see gossip_mix_update_flat; returns (w_new, mu_new,
+    buffer_new) there, (w_new, mu_new) otherwise.
+    """
+    has_momentum = momentum is not None
+    mu = momentum if has_momentum else w      # ignored when has_momentum=False
+    if backend == "auto":
+        backend = "ref" if _on_cpu() else "pallas"
+    if backend == "ref":
+        out = ref.gossip_mix_update_flat_ref(
+            w, remote, grads, mu, partners, coefs, lr=lr, beta=beta,
+            weight_decay=weight_decay, has_momentum=has_momentum,
+            buffer=buffer)
+    else:
+        out = gossip_mix_update_flat(
+            w, remote, grads, mu, partners, coefs, lr=lr, beta=beta,
+            weight_decay=weight_decay, has_momentum=has_momentum,
+            buffer=buffer, interpret=_on_cpu())
+    w_new, mu_new = out[0], (out[1] if has_momentum else None)
+    if buffer is not None:
+        return w_new, mu_new, out[2]
+    return w_new, mu_new
 
 
 def dpsgd_fused_update(params_tree, neighbor_trees, grads_tree, momentum_tree,

@@ -17,6 +17,44 @@ def gossip_mix_update_ref(w, neighbors, grads, momentum, coefs, *, lr: float,
     return mixed - lr * mu_new, mu_new
 
 
+def gossip_mix_update_flat_ref(w, remote, grads, momentum, partners, coefs, *,
+                               lr: float, beta: float = 0.0,
+                               weight_decay: float = 0.0,
+                               has_momentum: bool = True, buffer=None):
+    """Same contract as kernels.gossip_mix.gossip_mix_update_flat.
+
+    Mirrors the kernel's arithmetic order (self term first, neighbors in
+    schedule order, fused lr scale, where-based active select, publish-mode
+    neighbor/buffer selects) so the two stay bitwise-close in interpret
+    mode."""
+    K = partners.shape[0]
+    publish = buffer is not None
+    mixed = coefs[:, 0][:, None, None] * w
+    for k in range(K):
+        nbr = remote[partners[k]]
+        if publish:
+            nbr = jnp.where((coefs[:, 3 + K] > 0.5)[:, None, None], nbr,
+                            buffer[partners[k]])
+        mixed = mixed + coefs[:, 1 + k][:, None, None] * nbr
+    g = grads
+    if weight_decay:
+        g = g + weight_decay * w
+    lr_eff = (lr * coefs[:, 1 + K])[:, None, None]
+    active = (coefs[:, 2 + K] > 0.5)[:, None, None]
+    if has_momentum:
+        mu_new = beta * momentum + g
+        new_w = jnp.where(active, mixed - lr_eff * mu_new, w)
+        mu_out = jnp.where(active, mu_new, momentum)
+    else:
+        new_w = jnp.where(active, mixed - lr_eff * g, w)
+        mu_out = momentum
+    if publish:
+        buf_new = jnp.where((coefs[:, 4 + K] > 0.5)[:, None, None], new_w,
+                            buffer)
+        return new_w, mu_out, buf_new
+    return new_w, mu_out
+
+
 def reorth_ref(basis, w, mask):
     """Same contract as kernels.reorth.reorth_pass (one CGS sweep).
 

@@ -26,7 +26,7 @@ from ..optim import sgd
 from . import analytic, sharding as shd
 from .mesh import make_production_mesh, n_learners
 from .roofline import memory_summary, roofline_from_compiled
-from .train import (make_dpsgd_train_step, make_prefill_step,
+from .train import (jit_train_step, make_dpsgd_train_step, make_prefill_step,
                     make_decode_step, make_ssgd_train_step,
                     train_state_shardings, train_state_specs)
 
@@ -71,7 +71,7 @@ def build_lowered(arch: str, shape: str, *, multi_pod: bool, algo: str,
         else:
             step = make_ssgd_train_step(api, opt, mesh)
         with mesh:
-            lowered = jax.jit(
+            lowered = jit_train_step(
                 step,
                 in_shardings=shd.named_shardings((state_shd, batch_shd), mesh),
                 out_shardings=shd.named_shardings((state_shd, None), mesh),

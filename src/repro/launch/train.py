@@ -35,14 +35,28 @@ try:                                      # jax >= 0.6
 except AttributeError:                    # jax 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map
 
-from ..core.dpsgd import (mix_einsum, mix_ppermute_pair, mix_ppermute_ring,
-                          straggler_active_mask)
+from ..core.dpsgd import (mix_einsum, mix_ppermute_pair,
+                          mix_ppermute_pair_flat, mix_ppermute_ring,
+                          mix_ppermute_ring_flat, straggler_active_mask)
 from ..core.topology import random_pair_matrix, ring_matrix
 from ..models.model import ModelAPI
 from ..models.shard_hints import activation_batch_axes
 from ..optim import Optimizer, apply_updates
 from . import sharding as shd
 from .mesh import learner_axes, n_learners
+
+
+def jit_train_step(step_fn: Callable, **jit_kwargs) -> Callable:
+    """jit a ``(state, batch) -> (state, metrics)`` step with state donation.
+
+    All production step builders below are pure; donating the state argument
+    lets XLA update the parameter / momentum / published-buffer arrays in
+    place (no double-buffering of model-sized state).  A consumed state must
+    not be reused — rebind it: ``state, m = step(state, batch)``.  Probe
+    entry points (make_probe_step) deliberately do NOT donate: the state
+    outlives a measurement pass.
+    """
+    return jax.jit(step_fn, donate_argnums=(0,), **jit_kwargs)
 
 
 class PjitTrainState(NamedTuple):
@@ -61,9 +75,15 @@ class PjitTrainState(NamedTuple):
 
 def make_dpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh,
                           topology: str = "random_pair",
-                          gossip_backend: str = "einsum") -> Callable:
+                          gossip_backend: str = "einsum",
+                          gossip_fuse: str = "flat") -> Callable:
+    """``gossip_fuse`` (ppermute backend only): 'flat' permutes each
+    device's LOCAL parameter shard as one lane-aligned (T_local, 128)
+    buffer — 2 collective-permutes per step regardless of leaf count
+    (DESIGN §11); 'leaf' is the per-leaf reference collective schedule."""
     L = n_learners(mesh)
     l_axes = learner_axes(mesh)
+    assert gossip_fuse in ("flat", "leaf"), gossip_fuse
 
     def gossip(params, key):
         if gossip_backend == "einsum":
@@ -76,11 +96,18 @@ def make_dpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh,
         specs = shd.params_sharding(params, mesh, stacked=True)
 
         def local(p):
-            mixed = mix_ppermute_ring(p, l_axes)
-            return mixed
+            if gossip_fuse == "flat":
+                return mix_ppermute_ring_flat(p, l_axes)
+            return mix_ppermute_ring(p, l_axes)
 
+        # the flat view concatenates leaves with different model-axis
+        # replication into one buffer, which defeats shard_map's static
+        # replication inference — the mix itself never touches the model
+        # axes (every model shard runs the identical elementwise program),
+        # so the check is soundly skipped (DESIGN §11)
         return _shard_map(local, mesh=mesh, in_specs=(specs,),
-                             out_specs=specs)(params)
+                             out_specs=specs,
+                             check_rep=gossip_fuse != "flat")(params)
 
     def train_step(state: PjitTrainState, batch):
         # batch leaves: (GB, ...) -> (L, B_local, ...)
@@ -116,7 +143,8 @@ def make_dpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh,
 
 def make_adpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh, *,
                            max_staleness: int = 4, slow_learner: int = -1,
-                           slow_factor: int = 1) -> Callable:
+                           slow_factor: int = 1,
+                           gossip_fuse: str = "flat") -> Callable:
     """One asynchronous-gossip tick as an SPMD program (DESIGN §3).
 
     Same simulation contract as the vmap research path: each learner mixes
@@ -128,6 +156,7 @@ def make_adpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh, *,
     """
     L = n_learners(mesh)
     l_axes = learner_axes(mesh)
+    assert gossip_fuse in ("flat", "leaf"), gossip_fuse
 
     def gossip(params, buffer, age, step):
         specs = shd.params_sharding(params, mesh, stacked=True)
@@ -137,11 +166,17 @@ def make_adpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh, *,
             fresh = a[0] >= max_staleness          # forced publish (bound)
             remote = jax.tree_util.tree_map(
                 lambda w, b: jnp.where(fresh, w, b), p, buf)
+            if gossip_fuse == "flat":
+                return mix_ppermute_pair_flat(p, l_axes, step, remote=remote)
             return mix_ppermute_pair(p, l_axes, step, remote=remote)
 
+        # check_rep: see make_dpsgd_train_step — the flat view breaks static
+        # replication inference, not actual replication
         return _shard_map(local, mesh=mesh,
                              in_specs=(specs, specs, age_spec),
-                             out_specs=specs)(params, buffer, age)
+                             out_specs=specs,
+                             check_rep=gossip_fuse != "flat")(params, buffer,
+                                                              age)
 
     def train_step(state: PjitTrainState, batch):
         stacked_batch = jax.tree_util.tree_map(

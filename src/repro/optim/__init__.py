@@ -9,7 +9,7 @@ An optimizer is a pair of functions:
 apply_updates is a plain tree add.  All of them are learner-axis agnostic:
 stacking a leading learner dim on every leaf just works.
 """
-from .base import Optimizer, apply_updates, scale_by_schedule
+from .base import FusedSGD, Optimizer, apply_updates, scale_by_schedule
 from .sgd import sgd
 from .adam import adam
 from .lamb import lamb
@@ -18,7 +18,8 @@ from .schedules import (constant_schedule, controller_scale, linear_warmup,
                         scale_by_controller, set_controller_scale, step_decay,
                         warmup_linear_scale)
 
-__all__ = ["Optimizer", "apply_updates", "sgd", "adam", "lamb", "decentlam",
+__all__ = ["FusedSGD", "Optimizer", "apply_updates", "sgd", "adam", "lamb",
+           "decentlam",
            "constant_schedule", "linear_warmup", "step_decay",
            "warmup_linear_scale", "scale_by_schedule", "scale_by_controller",
            "set_controller_scale", "controller_scale"]

@@ -1,10 +1,36 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSGD:
+    """Static recipe for the fused flat-engine update (DESIGN §11).
+
+    An optimizer that is exactly momentum-SGD (optionally weight-decayed and
+    scaled by schedule/controller multipliers) can run inside the batched
+    gossip-mix Pallas kernel instead of as separate tree_map passes.  The
+    kernel bakes in ``lr``/``beta``/``weight_decay`` statically; everything
+    state-dependent flows through these accessors so wrappers
+    (scale_by_schedule, scale_by_controller) compose without retracing:
+
+      read_mu / write_mu — locate the momentum buffer inside the (possibly
+        nested) optimizer state; read_mu returns None for momentum-free SGD.
+      scale — the traced lr multiplier ((n,) for vmapped/stacked states,
+        scalar otherwise); the kernel receives it as an operand.
+      bump — advance any step counters (the momentum write is separate).
+    """
+    lr: float
+    beta: float = 0.0
+    weight_decay: float = 0.0
+    read_mu: Callable[[Any], Any] = lambda s: None
+    write_mu: Callable[[Any, Any], Any] = lambda s, mu: s
+    scale: Callable[[Any], Any] = lambda s: jnp.float32(1.0)
+    bump: Callable[[Any], Any] = lambda s: s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -14,6 +40,13 @@ class Optimizer:
     # decentralized-aware optimizers (decentlam) additionally receive the
     # post-gossip weights: update(grads, state, params, mixed)
     wants_mixed: bool = False
+    # non-None when the update is plain (momentum-)SGD and may be fused into
+    # the flat engine's batched gossip kernel (core/trainer.py, DESIGN §11)
+    fused: Optional[FusedSGD] = None
+    # True when the update's semantics depend on the per-leaf structure
+    # (lamb's layer-wise trust ratio): the flat engine would silently
+    # collapse that to one global leaf, so the trainer refuses/avoids it
+    layout_sensitive: bool = False
 
 
 def apply_updates(params, updates):
@@ -36,4 +69,15 @@ def scale_by_schedule(opt: Optimizer, schedule) -> Optimizer:
         upd = jax.tree_util.tree_map(lambda u: scale * u, upd)
         return upd, {"inner": inner, "step": state["step"] + 1}
 
-    return Optimizer(init, update, wants_mixed=opt.wants_mixed)
+    fused = None
+    if opt.fused is not None:
+        f = opt.fused
+        fused = FusedSGD(
+            lr=f.lr, beta=f.beta, weight_decay=f.weight_decay,
+            read_mu=lambda s: f.read_mu(s["inner"]),
+            write_mu=lambda s, mu: {**s, "inner": f.write_mu(s["inner"], mu)},
+            scale=lambda s: schedule(s["step"]) * f.scale(s["inner"]),
+            bump=lambda s: {**s, "inner": f.bump(s["inner"]),
+                            "step": s["step"] + 1})
+    return Optimizer(init, update, wants_mixed=opt.wants_mixed, fused=fused,
+                     layout_sensitive=opt.layout_sensitive)

@@ -40,4 +40,6 @@ def lamb(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-6,
         upd = jax.tree_util.tree_map(_upd, m, v, params)
         return upd, {"m": m, "v": v, "t": t}
 
-    return Optimizer(init, update)
+    # layer-wise trust ratio: semantics depend on the leaf structure —
+    # the flat engine must not run it on a single collapsed leaf
+    return Optimizer(init, update, layout_sensitive=True)

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .base import Optimizer
+from .base import FusedSGD, Optimizer
 
 
 def constant_schedule(value: float = 1.0):
@@ -49,7 +49,17 @@ def scale_by_controller(opt: Optimizer) -> Optimizer:
         upd = jax.tree_util.tree_map(lambda u: state["scale"] * u, upd)
         return upd, {"inner": inner, "scale": state["scale"]}
 
-    return Optimizer(init, update, wants_mixed=opt.wants_mixed)
+    fused = None
+    if opt.fused is not None:
+        f = opt.fused
+        fused = FusedSGD(
+            lr=f.lr, beta=f.beta, weight_decay=f.weight_decay,
+            read_mu=lambda s: f.read_mu(s["inner"]),
+            write_mu=lambda s, mu: {**s, "inner": f.write_mu(s["inner"], mu)},
+            scale=lambda s: s["scale"] * f.scale(s["inner"]),
+            bump=lambda s: {**s, "inner": f.bump(s["inner"])})
+    return Optimizer(init, update, wants_mixed=opt.wants_mixed, fused=fused,
+                     layout_sensitive=opt.layout_sensitive)
 
 
 def set_controller_scale(opt_state, scale):

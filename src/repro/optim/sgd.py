@@ -3,12 +3,18 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .base import Optimizer
+from .base import FusedSGD, Optimizer
 
 
 def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False,
         weight_decay: float = 0.0) -> Optimizer:
-    """SGD with (optional) heavy-ball momentum — the paper's optimizer."""
+    """SGD with (optional) heavy-ball momentum — the paper's optimizer.
+
+    Heavy-ball (and plain) SGD advertises a FusedSGD recipe so the flat
+    engine can run it inside the batched gossip kernel; the nesterov
+    variant's update reads both mu and g after the accumulate and stays on
+    the unfused path.
+    """
 
     def init(params):
         if momentum == 0.0:
@@ -32,4 +38,12 @@ def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False,
             upd = jax.tree_util.tree_map(lambda m: -lr * m, mu)
         return upd, {"mu": mu}
 
-    return Optimizer(init, update)
+    fused = None
+    if not nesterov:
+        if momentum == 0.0:
+            fused = FusedSGD(lr=lr, weight_decay=weight_decay)
+        else:
+            fused = FusedSGD(lr=lr, beta=momentum, weight_decay=weight_decay,
+                             read_mu=lambda s: s["mu"],
+                             write_mu=lambda s, mu_new: {"mu": mu_new})
+    return Optimizer(init, update, fused=fused)

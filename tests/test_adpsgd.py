@@ -100,12 +100,17 @@ def test_staleness_zero_matches_sync_pairwise_dpsgd_bitwise():
     adp = AlgoConfig(algo="adpsgd", topology="random_pair", n_learners=n,
                      max_staleness=0)
     opt = sgd(0.05, momentum=0.9)
-    st_s, _, _ = _run(sync, opt, steps)
-    st_a, _, _ = _run(adp, opt, steps)
-    np.testing.assert_array_equal(np.asarray(st_s.params["w"]),
-                                  np.asarray(st_a.params["w"]))
-    np.testing.assert_array_equal(np.asarray(st_s.opt_state["mu"]["w"]),
-                                  np.asarray(st_a.opt_state["mu"]["w"]))
+    st_s, _, tr_s = _run(sync, opt, steps)
+    st_a, _, tr_a = _run(adp, opt, steps)
+    # both run the flat fused engine by default; the raw (n, T, 128) buffers
+    # must agree bit for bit, and so must the pytree views
+    np.testing.assert_array_equal(np.asarray(st_s.params),
+                                  np.asarray(st_a.params))
+    vs, va = tr_s.state_view(st_s), tr_a.state_view(st_a)
+    np.testing.assert_array_equal(np.asarray(vs.params["w"]),
+                                  np.asarray(va.params["w"]))
+    np.testing.assert_array_equal(np.asarray(vs.opt_state["mu"]["w"]),
+                                  np.asarray(va.opt_state["mu"]["w"]))
     assert int(jnp.max(st_a.age)) == 0
 
 
@@ -176,10 +181,11 @@ def test_adpsgd_config_validation():
 def test_decentlam_equals_heavy_ball_without_gossip():
     """solo topology => mix(w) == w => DecentLaM must be bitwise SGD+momentum."""
     cfg = AlgoConfig(algo="dpsgd", topology="solo", n_learners=4)
-    st_hb, _, _ = _run(cfg, sgd(0.05, momentum=0.9), steps=10)
-    st_dl, _, _ = _run(cfg, decentlam(0.05, momentum=0.9), steps=10)
-    np.testing.assert_array_equal(np.asarray(st_hb.params["w"]),
-                                  np.asarray(st_dl.params["w"]))
+    st_hb, _, tr_hb = _run(cfg, sgd(0.05, momentum=0.9), steps=10)
+    st_dl, _, tr_dl = _run(cfg, decentlam(0.05, momentum=0.9), steps=10)
+    np.testing.assert_array_equal(
+        np.asarray(tr_hb.params_tree(st_hb)["w"]),
+        np.asarray(tr_dl.params_tree(st_dl)["w"]))
 
 
 def test_decentlam_removes_momentum_bias():
@@ -202,9 +208,9 @@ def test_decentlam_removes_momentum_bias():
     cfg = AlgoConfig(algo="dpsgd", topology="ring", n_learners=n)
 
     def bias(opt):
-        st, _, _ = _run(cfg, opt, steps=600, loss_fn=loss_fn, params=params,
+        st, _, tr = _run(cfg, opt, steps=600, loss_fn=loss_fn, params=params,
                         batch=batch)
-        wbar = np.asarray(jnp.mean(st.params["w"], 0))
+        wbar = np.asarray(jnp.mean(tr.params_tree(st)["w"], 0))
         return float(np.linalg.norm(wbar - w_star))
 
     lr = 0.2

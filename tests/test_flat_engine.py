@@ -1,0 +1,322 @@
+"""Flat-state engine contracts (DESIGN §11).
+
+Pins the tentpole guarantees of PR 3:
+  * parity — the flat fused engine reproduces the pytree reference for
+    SSGD / DPSGD / AD-PSGD (params, momentum, metrics), for both kernel
+    backends;
+  * the lax.scan driver == k sequential steps, optimizer state included
+    (momentum AND controller scale round-trip);
+  * the traced step carries no parameter-sized concatenate (the per-step
+    re-flatten is gone) and never retraces across steps/scale writes;
+  * train_step donates its state (buffers reused in place).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AlgoConfig, MultiLearnerTrainer
+from repro.core.flatstate import LANE, FlatMeta, flat_meta, max_concat_elems
+from repro.data import ShardedLoader, TemplateImages
+from repro.models import fcnet
+from repro.optim import (controller_scale, scale_by_controller,
+                         scale_by_schedule, set_controller_scale, sgd,
+                         constant_schedule)
+
+N = 5
+DS = TemplateImages()
+LOADER = ShardedLoader(DS, n_learners=N, local_batch=64, seed=0)
+PARAMS = fcnet.init_params(jax.random.PRNGKey(0), in_dim=784, hidden=50)
+ADPSGD_KW = dict(max_staleness=4, slow_learner=0, slow_factor=3)
+
+
+def _trainer(algo, engine, opt=None, backend="auto", topology="random_pair",
+             **kw):
+    return MultiLearnerTrainer(
+        fcnet.loss_fn, opt or sgd(0.1, momentum=0.9),
+        AlgoConfig(algo=algo, topology=topology, n_learners=N, **kw),
+        engine=engine, kernel_backend=backend)
+
+
+def _train(tr, steps, seed=0):
+    st = tr.init(jax.random.PRNGKey(seed), PARAMS)
+    losses = []
+    for i in range(steps):
+        st, m = tr.train_step(st, LOADER.batch(i))
+        losses.append(float(m.loss))
+    return st, losses
+
+
+# ---------------------------------------------------------------------------
+# flat store
+# ---------------------------------------------------------------------------
+
+def test_flat_meta_roundtrip_dtypes_and_padding():
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 5), jnp.bfloat16)},
+            "d": jnp.float32(2.0)}
+    meta = flat_meta(tree)
+    assert meta.rows % 8 == 0
+    flat = meta.flatten(tree)
+    assert flat.shape == (meta.rows, LANE) and flat.dtype == jnp.float32
+    back = meta.unflatten(flat)
+    assert back["b"]["c"].dtype == jnp.bfloat16    # per-leaf dtype preserved
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.arange(10.0))
+    assert float(back["d"]) == 2.0
+    # stacked leading axis
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(jnp.asarray(x)[None],
+                                   (4,) + jnp.shape(x)), tree)
+    fs = meta.flatten(stacked)
+    assert fs.shape == (4, meta.rows, LANE)
+    np.testing.assert_array_equal(
+        np.asarray(meta.unflatten(fs)["a"]), np.asarray(stacked["a"]))
+    # meta is cached per structure
+    assert flat_meta(tree) is meta
+
+
+def test_flat_meta_scatter_is_unflatten_transpose():
+    meta = flat_meta(PARAMS)
+    flat = meta.flatten(PARAMS)
+    np.testing.assert_array_equal(
+        np.asarray(meta.scatter(meta.unflatten(flat))), np.asarray(flat))
+
+
+# ---------------------------------------------------------------------------
+# engine parity (satellite: SSGD / DPSGD / AD-PSGD, both kernel backends)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo,kw", [("ssgd", {}), ("dpsgd", {}),
+                                     ("adpsgd", ADPSGD_KW)])
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_flat_matches_pytree(algo, kw, backend):
+    steps = 12
+    st_t, l_t = _train(_trainer(algo, "pytree", **kw), steps)
+    tr_f = _trainer(algo, "flat", backend=backend, **kw)
+    st_f, l_f = _train(tr_f, steps)
+    assert st_f.params.shape == (N, tr_f._meta.rows, LANE)
+    view = tr_f.state_view(st_f)
+    for k in st_t.params:
+        np.testing.assert_allclose(np.asarray(view.params[k]),
+                                   np.asarray(st_t.params[k]),
+                                   atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(view.opt_state["mu"][k]),
+                                   np.asarray(st_t.opt_state["mu"][k]),
+                                   atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(l_f, l_t, atol=1e-5)
+    if algo == "adpsgd":
+        np.testing.assert_array_equal(np.asarray(st_f.age),
+                                      np.asarray(st_t.age))
+        np.testing.assert_array_equal(np.asarray(st_f.clock),
+                                      np.asarray(st_t.clock))
+
+
+def test_dpsgd_defaults_to_flat_fused_engine():
+    """Acceptance: MultiLearnerTrainer(algo='dpsgd') IS the flat fused
+    engine; SSGD keeps the reference layout."""
+    tr = _trainer("dpsgd", "auto")
+    assert tr.is_flat and tr._fused is not None
+    tr_a = _trainer("adpsgd", "auto", **ADPSGD_KW)
+    assert tr_a.is_flat and tr_a._fused is not None
+    assert not _trainer("ssgd", "auto").is_flat
+    with pytest.raises(ValueError):
+        _trainer("ssgd_star", "flat")
+
+
+def test_flat_ring_topology_fused():
+    tr_f = _trainer("dpsgd", "flat", topology="ring")
+    assert tr_f._fused is not None
+    st_f, l_f = _train(tr_f, 8)
+    st_t, l_t = _train(_trainer("dpsgd", "pytree", topology="ring"), 8)
+    view = tr_f.state_view(st_f)
+    for k in st_t.params:
+        np.testing.assert_allclose(np.asarray(view.params[k]),
+                                   np.asarray(st_t.params[k]), atol=2e-5)
+
+
+def test_layout_sensitive_optimizer_stays_on_pytree_engine():
+    """lamb's layer-wise trust ratio would silently collapse on the single
+    flat leaf: auto must pick the pytree engine, explicit flat must raise."""
+    from repro.optim import lamb
+    tr = _trainer("dpsgd", "auto", opt=lamb(0.01))
+    assert not tr.is_flat
+    with pytest.raises(ValueError):
+        _trainer("dpsgd", "flat", opt=lamb(0.01))
+
+
+def test_state_view_roundtrip():
+    """state_from_view(state_view(s)) == s bitwise — the checkpoint
+    layout-portability contract (params, momentum, scalars)."""
+    from repro.optim import scale_by_controller
+    tr = _trainer("adpsgd", "flat", opt=scale_by_controller(
+        sgd(0.1, momentum=0.9)), **ADPSGD_KW)
+    st, _ = _train(tr, 5)
+    back = tr.state_from_view(tr.state_view(st))
+    np.testing.assert_array_equal(np.asarray(back.params),
+                                  np.asarray(st.params))
+    np.testing.assert_array_equal(np.asarray(back.buffer),
+                                  np.asarray(st.buffer))
+    for a, b in zip(jax.tree_util.tree_leaves(back.opt_state),
+                    jax.tree_util.tree_leaves(st.opt_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flat_unfused_optimizer_falls_back():
+    """A non-SGD optimizer (nesterov here) still runs the flat engine via
+    the generic path — no fused kernel, same results as pytree."""
+    opt = sgd(0.1, momentum=0.9, nesterov=True)
+    assert opt.fused is None
+    tr_f = _trainer("dpsgd", "flat", opt=opt)
+    assert tr_f._fused is None
+    st_f, _ = _train(tr_f, 8)
+    st_t, _ = _train(_trainer("dpsgd", "pytree", opt=opt), 8)
+    view = tr_f.state_view(st_f)
+    for k in st_t.params:
+        np.testing.assert_allclose(np.asarray(view.params[k]),
+                                   np.asarray(st_t.params[k]), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# scan driver + opt-state round-trip
+# ---------------------------------------------------------------------------
+
+def test_run_steps_matches_sequential_with_controller_scale():
+    """lax.scan(k) == k sequential train_steps, opt state included: momentum
+    buffers AND the AutoLR controller scale survive the scan round-trip."""
+    opt = scale_by_controller(scale_by_schedule(sgd(0.1, momentum=0.9),
+                                                constant_schedule(1.0)))
+    k = 7
+    batches = [LOADER.batch(i) for i in range(k)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
+
+    tr1 = _trainer("dpsgd", "flat", opt=opt)
+    tr2 = _trainer("dpsgd", "flat", opt=opt)
+    st1 = tr1.init(jax.random.PRNGKey(0), PARAMS)
+    st2 = tr2.init(jax.random.PRNGKey(0), PARAMS)
+    st1 = st1._replace(opt_state=set_controller_scale(st1.opt_state, 0.7))
+    st2 = st2._replace(opt_state=set_controller_scale(st2.opt_state, 0.7))
+
+    st1, ms = tr1.run_steps(st1, stacked, k=k)
+    for b in batches:
+        st2, _ = tr2.train_step(st2, b)
+
+    assert ms.loss.shape == (k,)
+    np.testing.assert_allclose(np.asarray(st1.params),
+                               np.asarray(st2.params), atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(tr1._fused.read_mu(st1.opt_state)),
+        np.asarray(tr2._fused.read_mu(st2.opt_state)), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(controller_scale(st1.opt_state)),
+                               0.7, rtol=1e-6)
+    assert int(st1.step) == k
+
+
+def test_run_steps_validates_k():
+    tr = _trainer("dpsgd", "flat")
+    st = tr.init(jax.random.PRNGKey(0), PARAMS)
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[LOADER.batch(i) for i in range(3)])
+    with pytest.raises(ValueError):
+        tr.run_steps(st, stacked, k=5)
+
+
+# ---------------------------------------------------------------------------
+# tracing guards: no param-sized concat, no retrace, state donation
+# ---------------------------------------------------------------------------
+
+def test_no_param_sized_concatenate_in_flat_step():
+    """The flatten happens once at init: the traced step (and the whole
+    scan driver) may only contain RNG-sized concats.  The old per-call
+    wrapper is the positive control for the checker."""
+    tr = _trainer("dpsgd", "flat")
+    st = tr.init(jax.random.PRNGKey(0), PARAMS)
+    batch = LOADER.batch(0)
+    n_elem = tr._meta.n_elem
+    assert max_concat_elems(
+        jax.make_jaxpr(tr._train_step)(st, batch)) < n_elem // 100
+
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[LOADER.batch(i) for i in range(3)])
+    assert max_concat_elems(
+        jax.make_jaxpr(tr._run_steps)(st, stacked)) < n_elem // 100
+
+    # positive control: the per-call flatten wrapper DOES concatenate
+    from repro.kernels.ops import dpsgd_fused_update
+    mu = jax.tree_util.tree_map(jnp.zeros_like, PARAMS)
+    jxp = jax.make_jaxpr(lambda a, g, m: dpsgd_fused_update(
+        a, [a], g, m, [0.5, 0.5], lr=0.1))(PARAMS, PARAMS, mu)
+    assert max_concat_elems(jxp) >= n_elem
+
+
+def test_no_retrace_across_steps_and_scale_writes():
+    """Compile-count guard: stepping and writing the controller scale must
+    reuse the ONE compiled executable (scale lives in opt state)."""
+    tr = _trainer("dpsgd", "flat", opt=scale_by_controller(sgd(0.1)))
+    st = tr.init(jax.random.PRNGKey(0), PARAMS)
+    for i in range(3):
+        st, _ = tr.train_step(st, LOADER.batch(i))
+    st = st._replace(opt_state=set_controller_scale(st.opt_state, 0.5))
+    for i in range(3, 6):
+        st, _ = tr.train_step(st, LOADER.batch(i))
+    assert tr.train_step._cache_size() == 1
+    # pytree engine gets the same guarantee
+    tr2 = _trainer("ssgd", "pytree", opt=scale_by_controller(sgd(0.1)))
+    st2 = tr2.init(jax.random.PRNGKey(0), PARAMS)
+    for i in range(2):
+        st2, _ = tr2.train_step(st2, LOADER.batch(i))
+    st2 = st2._replace(opt_state=set_controller_scale(st2.opt_state, 0.5))
+    st2, _ = tr2.train_step(st2, LOADER.batch(2))
+    assert tr2.train_step._cache_size() == 1
+
+
+def test_train_step_donates_state():
+    """donate_argnums is live: a consumed state's buffers are gone (the
+    engine updates them in place — reuse is a bug, and jax says so)."""
+    tr = _trainer("dpsgd", "flat")
+    st0 = tr.init(jax.random.PRNGKey(0), PARAMS)
+    st1, _ = tr.train_step(st0, LOADER.batch(0))
+    with pytest.raises(RuntimeError):
+        jax.block_until_ready(st0.params + 0)
+
+
+# ---------------------------------------------------------------------------
+# probe seam + views on the flat engine
+# ---------------------------------------------------------------------------
+
+def test_probe_hooks_see_pytree_view_and_controller_writes_flat_state():
+    from repro.landscape import ProbeSchedule
+    tr = _trainer("dpsgd", "flat", opt=scale_by_controller(sgd(0.1)))
+    seen = {}
+
+    def probe(state, batch):
+        seen["params"] = state.params          # must be the pytree view
+        return 0.5
+
+    tr.add_probe("p", ProbeSchedule(every=1), probe,
+                 on_result=lambda st, r: st._replace(
+                     opt_state=set_controller_scale(st.opt_state, r)))
+    st = tr.init(jax.random.PRNGKey(0), PARAMS)
+    st, results = tr.run_probes(st, LOADER.batch(0), step=0)
+    assert results == {"p": 0.5}
+    assert set(seen["params"].keys()) == set(PARAMS.keys())
+    np.testing.assert_allclose(np.asarray(controller_scale(st.opt_state)),
+                               0.5, rtol=1e-6)
+    # diagnostics + eval accept the flat state directly
+    d = tr.diagnostics(st, LOADER.batch(1))
+    assert bool(jnp.isfinite(d.alpha_e))
+    ev = tr.eval_loss(st, LOADER.eval_batch(64))
+    assert bool(jnp.isfinite(ev))
+
+
+def test_flat_metrics_match_pytree_metrics():
+    tr_t = _trainer("dpsgd", "pytree")
+    tr_f = _trainer("dpsgd", "flat")
+    st_t = tr_t.init(jax.random.PRNGKey(0), PARAMS)
+    st_f = tr_f.init(jax.random.PRNGKey(0), PARAMS)
+    for i in range(5):
+        st_t, m_t = tr_t.train_step(st_t, LOADER.batch(i))
+        st_f, m_f = tr_f.train_step(st_f, LOADER.batch(i))
+    np.testing.assert_allclose(float(m_f.loss), float(m_t.loss), atol=1e-5)
+    np.testing.assert_allclose(float(m_f.grad_norm), float(m_t.grad_norm),
+                               rtol=1e-4)
+    np.testing.assert_allclose(float(m_f.sigma_w_sq), float(m_t.sigma_w_sq),
+                               rtol=2e-3, atol=1e-9)

@@ -6,8 +6,10 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.gossip_mix import gossip_mix_update, flatten_for_kernel
-from repro.kernels.ops import dpsgd_fused_update, flash_attention
+from repro.kernels.gossip_mix import (flatten_for_kernel, gossip_mix_update,
+                                      gossip_mix_update_flat)
+from repro.kernels.ops import (dpsgd_fused_update, flash_attention,
+                               flat_gossip_update)
 
 
 @pytest.mark.parametrize("T,K", [(256, 1), (512, 2), (1024, 3)])
@@ -61,6 +63,112 @@ def test_flash_attention_model_layout_and_grad():
     g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
     for gi in g:
         assert bool(jnp.isfinite(gi).all())
+
+
+@pytest.mark.parametrize("n,T,K", [(4, 256, 1), (5, 336, 1), (8, 512, 2)])
+@pytest.mark.parametrize("has_mu,wd", [(True, 0.0), (False, 0.0),
+                                       (True, 0.01)])
+def test_batched_gossip_kernel_sweep(n, T, K, has_mu, wd):
+    """Learner-major batched kernel (scalar-prefetch neighbor gather) vs the
+    jnp oracle: momentum on/off, weight decay, per-learner lr scale, a solo
+    learner and an inactive (straggler) learner."""
+    key = jax.random.PRNGKey(n * T + K)
+    ks = jax.random.split(key, 5)
+    w = jax.random.normal(ks[0], (n, T, 128))
+    remote = jax.random.normal(ks[1], (n, T, 128))
+    g = jax.random.normal(ks[2], (n, T, 128))
+    mu = jax.random.normal(ks[3], (n, T, 128)) if has_mu else None
+    if K == 1:
+        partner = jnp.roll(jnp.arange(n), 1).at[0].set(0)   # learner 0 solo
+        partners = partner[None].astype(jnp.int32)
+        self_c = jnp.where(partner == jnp.arange(n), 1.0, 0.5)
+        mix = jnp.stack([self_c, 1.0 - self_c], axis=1)
+    else:
+        idx = jnp.arange(n)
+        partners = jnp.stack([(idx + 1) % n, (idx - 1) % n]).astype(jnp.int32)
+        mix = jnp.full((n, 3), 1.0 / 3.0)
+    scale = jnp.linspace(0.5, 1.5, n)[:, None]              # per-learner lr
+    active = jnp.ones((n,)).at[n - 1].set(0.0)[:, None]     # straggler
+    coefs = jnp.concatenate([mix, scale, active], axis=1).astype(jnp.float32)
+
+    w1, m1 = flat_gossip_update(w, remote, g, mu, partners, coefs,
+                                lr=0.1, beta=0.9, weight_decay=wd,
+                                backend="pallas")
+    w2, m2 = flat_gossip_update(w, remote, g, mu, partners, coefs,
+                                lr=0.1, beta=0.9, weight_decay=wd,
+                                backend="ref")
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w2), atol=1e-5)
+    if has_mu:
+        np.testing.assert_allclose(np.asarray(m1), np.asarray(m2), atol=1e-5)
+        # the inactive learner's momentum streams through untouched
+        np.testing.assert_array_equal(np.asarray(m1[n - 1]),
+                                      np.asarray(mu[n - 1]))
+    # inactive learner's weights unchanged; solo learner mixes with itself
+    np.testing.assert_array_equal(np.asarray(w1[n - 1]), np.asarray(w[n - 1]))
+
+
+@pytest.mark.parametrize("has_mu", [True, False])
+def test_batched_kernel_publish_mode(has_mu):
+    """AD-PSGD publish mode: stale-remote select + published-buffer rewrite
+    in the same pass, kernel vs oracle, and against the unfused reference
+    composition (where -> plain kernel -> where)."""
+    n, T = 6, 256
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    w = jax.random.normal(ks[0], (n, T, 128))
+    buf = jax.random.normal(ks[1], (n, T, 128))
+    g = jax.random.normal(ks[2], (n, T, 128))
+    mu = jax.random.normal(ks[3], (n, T, 128)) if has_mu else None
+    partner = jnp.array([1, 0, 3, 2, 5, 4])
+    partners = partner[None].astype(jnp.int32)
+    mix = jnp.tile(jnp.array([0.5, 0.5]), (n, 1))
+    scale = jnp.ones((n, 1))
+    active = jnp.ones((n,)).at[0].set(0.0)
+    fresh = jnp.zeros((n,)).at[2].set(1.0).at[3].set(1.0)
+    coefs = jnp.concatenate(
+        [mix, scale, active[:, None], fresh[partner][:, None],
+         jnp.maximum(active, fresh)[:, None]], axis=1).astype(jnp.float32)
+
+    outs = {}
+    for backend in ("pallas", "ref"):
+        outs[backend] = flat_gossip_update(
+            w, w, g, mu, partners, coefs, lr=0.1, beta=0.9, buffer=buf,
+            backend=backend)
+    for a, b in zip(outs["pallas"], outs["ref"]):
+        if a is not None:
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5)
+    # unfused reference composition
+    remote = jnp.where(fresh[:, None, None] > 0.5, w, buf)
+    mixed = 0.5 * w + 0.5 * remote[partner]
+    mu_new = (0.9 * mu + g) if has_mu else g
+    stepped = mixed - 0.1 * mu_new
+    w_exp = jnp.where(active[:, None, None] > 0.5, stepped, w)
+    buf_exp = jnp.where(jnp.maximum(active, fresh)[:, None, None] > 0.5,
+                        w_exp, buf)
+    np.testing.assert_allclose(np.asarray(outs["ref"][0]), np.asarray(w_exp),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(outs["ref"][2]),
+                               np.asarray(buf_exp), atol=1e-5)
+    # inactive learner 0: weights and momentum untouched, nothing published
+    np.testing.assert_array_equal(np.asarray(outs["pallas"][0][0]),
+                                  np.asarray(w[0]))
+    np.testing.assert_array_equal(np.asarray(outs["pallas"][2][0]),
+                                  np.asarray(buf[0]))
+
+
+def test_batched_kernel_solo_learner_keeps_self_mix():
+    """coefs [1, 0]: the solo learner's 'mix' is exactly its own weights
+    (the update still applies) — mirrors mix_pair_gather semantics."""
+    n, T = 4, 256
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    w = jax.random.normal(ks[0], (n, T, 128))
+    g = jax.random.normal(ks[1], (n, T, 128))
+    partners = jnp.array([[1, 0, 3, 2]], jnp.int32)
+    coefs = jnp.tile(jnp.array([1.0, 0.0, 1.0, 1.0], jnp.float32), (n, 1))
+    w1, _ = flat_gossip_update(w, w, g, None, partners, coefs, lr=0.1,
+                               backend="pallas")
+    np.testing.assert_allclose(np.asarray(w1), np.asarray(w - 0.1 * g),
+                               atol=1e-6)
 
 
 def test_flatten_roundtrip():

@@ -234,8 +234,8 @@ def test_ssgd_autolr_beats_ssgd_on_launch_path():
     through set_controller_scale."""
     from types import SimpleNamespace
 
-    from repro.launch.train import (PjitTrainState, make_probe_step,
-                                    make_ssgd_train_step)
+    from repro.launch.train import (PjitTrainState, jit_train_step,
+                                    make_probe_step, make_ssgd_train_step)
 
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     api = SimpleNamespace(loss_fn=quad_loss)
@@ -244,12 +244,15 @@ def test_ssgd_autolr_beats_ssgd_on_launch_path():
     loss0 = float(0.5 * init["w"] @ A @ init["w"])
 
     def run(optimizer, with_autolr, steps):
-        step_fn = jax.jit(make_ssgd_train_step(api, optimizer, mesh))
+        step_fn = jit_train_step(make_ssgd_train_step(api, optimizer, mesh))
         probe_fn = jax.jit(make_probe_step(api, mesh, alpha=ALPHA,
                                            stacked=False, lanczos_iters=10,
                                            hutchinson_samples=4))
         ctl = AutoLRController(alpha0=ALPHA)
-        state = PjitTrainState(params=init, opt_state=optimizer.init(init),
+        # the jitted step donates its state: give each run its own buffers
+        init_run = jax.tree_util.tree_map(jnp.copy, init)
+        state = PjitTrainState(params=init_run,
+                               opt_state=optimizer.init(init_run),
                                step=jnp.zeros((), jnp.int32),
                                rng=jax.random.PRNGKey(0))
         with mesh:

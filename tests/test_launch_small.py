@@ -17,9 +17,10 @@ from repro.configs import get_config
 from repro.models.model import build_model
 from repro.optim import sgd
 from repro.launch import sharding as shd
-from repro.launch.train import (make_adpsgd_train_step, make_dpsgd_train_step,
-                                make_ssgd_train_step, make_decode_step,
-                                train_state_specs, train_state_shardings)
+from repro.launch.train import (jit_train_step, make_adpsgd_train_step,
+                                make_dpsgd_train_step, make_ssgd_train_step,
+                                make_decode_step, train_state_specs,
+                                train_state_shardings)
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
@@ -42,7 +43,7 @@ for algo, backend in [("dpsgd", "einsum"), ("dpsgd", "ppermute"),
     else:
         step = make_ssgd_train_step(api, opt, mesh)
     with mesh:
-        compiled = jax.jit(
+        compiled = jit_train_step(
             step, in_shardings=shd.named_shardings((shds, bshd), mesh),
             out_shardings=shd.named_shardings((shds, None), mesh),
         ).lower(specs, bspecs).compile()
@@ -67,7 +68,7 @@ for algo, backend in [("dpsgd", "einsum"), ("dpsgd", "ppermute"),
         batch = jax.tree_util.tree_map(
             lambda s: jnp.zeros(s.shape, s.dtype), bspecs)
         with mesh:
-            run = jax.jit(step)
+            run = jit_train_step(step)
             ages = []
             for _ in range(4):
                 state, metrics = run(state, batch)
