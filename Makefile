@@ -9,13 +9,15 @@ test:
 	$(PYTHON) -m pytest -x -q
 
 # quick benchmark subset: one dynamics figure, the kernel microbench, the
-# straggler measurement (the async path) and the engine regression harness
-# (flat vs pytree, BENCH_PR3.json)
+# straggler measurement (the async path), the engine regression harness
+# (flat vs pytree, BENCH_PR3.json) and the GossipSchedule topology sweep
+# (smoke mode: every schedule, short training)
 bench-smoke:
 	$(PYTHON) -m benchmarks.fig2_effective_lr
 	$(PYTHON) -m benchmarks.bench_kernels
 	$(PYTHON) -m benchmarks.fig3_straggler
 	$(PYTHON) -m benchmarks.bench_throughput
+	$(PYTHON) -m benchmarks.ablation_topology --smoke
 
 # bench-smoke + the CSV output contract (benchmarks/README.md): every
 # benchmark prints `name,us_per_call,derived` and writes a results table
@@ -27,7 +29,8 @@ bench-check:
 	$(MAKE) bench-smoke > bench_smoke.out 2>&1; status=$$?; \
 	    cat bench_smoke.out; exit $$status
 	$(PYTHON) -m benchmarks.check_contract bench_smoke.out \
-	    fig2_effective_lr bench_kernel fig3_straggler bench_throughput
+	    fig2_effective_lr bench_kernel fig3_straggler bench_throughput \
+	    ablation_topology
 	$(PYTHON) -m benchmarks.check_regression results/bench/BENCH_PR3.json
 
 # the full paper sweep (writes results/bench/*.csv)

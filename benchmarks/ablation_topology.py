@@ -1,34 +1,85 @@
-"""Beyond-paper ablation (App. F territory): gossip topology sweep at the
-critical lr — full avg (=SSGD weight dynamics), ring, random-pair (paper's
-recipe), hierarchical-equivalent torus, and solo (no mixing).  Shows the
-spectral-gap / noise trade-off: solo never consensus-averages (loss stays
-high across learners), full averaging kills the landscape-dependent noise
-(back to SSGD behaviour), ring/random-pair hit the sweet spot."""
+"""Beyond-paper ablation (App. F territory): the full GossipSchedule sweep
+at the critical lr — every compiled topology (static: full/ring/torus/
+hierarchical/exp; time-varying: one-peer exponential, random matchings with
+multi-round mixing) plus solo, each dispatching the fused flat engine
+(DESIGN §12).
+
+Two stories in one table:
+
+  * the paper's noise trade-off: solo never consensus-averages, full
+    averaging kills the landscape-dependent noise (back to SSGD behaviour),
+    the sparse schedules hit the sweet spot;
+  * the schedule analyzer: per-schedule measured consensus contraction vs
+    the product-of-(1-λ₂) bound (`measured_gap >= gap_bound`; time-varying
+    schedules beat their per-step bound by a wide margin — that headroom is
+    why one-peer exponential is usable at one collective per step).
+
+CSV columns (benchmarks/README.md contract):
+  topology, K, period, rounds_per_step, fused, gap_bound, measured_gap,
+  final_loss, consensus_dist
+Smoke mode (``--smoke``, used by `make bench-check`) shortens training but
+keeps every schedule and every column.
+"""
 from __future__ import annotations
 
-from repro.core import topology as topo
+import sys
+
+import numpy as np
+
+from repro.core import learner_var
+from repro.core.schedule import make_schedule, spectral_gap_profile
 
 from .common import final_loss, train_fc, write_table
 
 LR = 0.5
+TOPOLOGIES = ("full", "ring", "torus", "random_pair", "solo",
+              "hierarchical", "exp", "one_peer_exp", "random_matching")
+N = 8
 
 
-def main():
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in argv
+    steps = 40 if smoke else 130
     rows = []
     us = 0.0
-    for name in ("full", "ring", "torus", "random_pair", "solo"):
-        r = train_fc("dpsgd", LR, steps=130, topology=name)
-        us = r["us_per_step"]
-        m = topo.make_mixing_fn(name, 5)(__import__("jax").random.PRNGKey(0))
-        rows.append([name, float(topo.spectral_gap(m)),
-                     final_loss(r["losses"])])
-    write_table("ablation_topology", ["topology", "spectral_gap",
-                                      "final_loss"], rows)
-    d = {r[0]: r[2] for r in rows}
-    derived = (f"full={d['full']:.3f} ring={d['ring']:.3f} "
-               f"pair={d['random_pair']:.3f} solo={d['solo']:.3f} "
-               f"(partial averaging beats full & none)")
-    print(f"ablation_topology,{us:.0f},{derived}")
+    for name in TOPOLOGIES:
+        kw = {"gossip_rounds": 2} if name == "random_matching" else {}
+        r = train_fc("dpsgd", LR, n=N, steps=steps, topology=name,
+                     algo_kwargs=kw)
+        us += r["us_per_step"]
+        tr = r["trainer"]
+        sched = make_schedule(name, N, rounds=kw.get("gossip_rounds", 1))
+        prof = spectral_gap_profile(sched, window=16)
+        consensus = float(np.sqrt(float(
+            learner_var(tr.params_tree(r["state"])))))
+        rows.append([
+            name,
+            sched.K if sched else 0,
+            sched.period if sched else 0,
+            sched.rounds_per_step if sched else 0,
+            int(tr._fused is not None),
+            round(prof["gap_bound"], 6),
+            round(prof["measured_gap"], 6),
+            final_loss(r["losses"]),
+            consensus,
+        ])
+    write_table("ablation_topology",
+                ["topology", "K", "period", "rounds_per_step", "fused",
+                 "gap_bound", "measured_gap", "final_loss", "consensus_dist"],
+                rows)
+    d = {r[0]: r for r in rows}
+    # every scheduled topology must have run the fused kernel; the analyzer
+    # must never report contraction faster than measured
+    assert all(r[4] == 1 for r in rows if r[0] != "solo"), rows
+    assert all(r[6] >= r[5] - 1e-9 for r in rows), rows
+    derived = (f"full={d['full'][7]:.3f} ring={d['ring'][7]:.3f} "
+               f"pair={d['random_pair'][7]:.3f} solo={d['solo'][7]:.3f} "
+               f"(partial averaging beats full & none); one_peer_exp "
+               f"measured_gap={d['one_peer_exp'][6]:.2f} vs per-step bound "
+               f"{d['one_peer_exp'][5]:.2f} at 1 collective/step; all "
+               f"schedules fused")
+    print(f"ablation_topology,{us / max(len(rows), 1):.0f},{derived}")
 
 
 if __name__ == "__main__":

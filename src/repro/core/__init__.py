@@ -4,7 +4,10 @@ from .dpsgd import (AlgoConfig, mix_einsum, mix_ppermute_ring,
                     mix_ppermute_pair, mix_pair_gather, straggler_active_mask)
 from .topology import (full_matrix, ring_matrix, torus_matrix, pair_partners,
                        random_pair_matrix, hierarchical_matrix,
-                       is_doubly_stochastic, spectral_gap, make_mixing_fn)
+                       exponential_matrix, is_doubly_stochastic, spectral_gap,
+                       make_mixing_fn)
+from .schedule import (GossipSchedule, make_schedule, spectral_gap_profile,
+                       SCHEDULED_TOPOLOGIES, DETERMINISTIC_TOPOLOGIES)
 from .flatstate import FlatMeta, flat_meta, max_concat_elems
 from .trainer import MultiLearnerTrainer, ProbeHook, TrainState, StepMetrics
 from .diagnostics import DiagStats, compute_diagnostics
@@ -15,8 +18,11 @@ __all__ = [
     "AlgoConfig", "mix_einsum", "mix_ppermute_ring", "mix_ppermute_pair",
     "mix_pair_gather", "pair_partners", "straggler_active_mask",
     "full_matrix", "ring_matrix", "torus_matrix", "random_pair_matrix",
-    "hierarchical_matrix", "is_doubly_stochastic", "spectral_gap",
-    "make_mixing_fn", "MultiLearnerTrainer", "ProbeHook", "TrainState",
+    "hierarchical_matrix", "exponential_matrix", "is_doubly_stochastic",
+    "spectral_gap", "make_mixing_fn",
+    "GossipSchedule", "make_schedule", "spectral_gap_profile",
+    "SCHEDULED_TOPOLOGIES", "DETERMINISTIC_TOPOLOGIES",
+    "MultiLearnerTrainer", "ProbeHook", "TrainState",
     "StepMetrics", "FlatMeta", "flat_meta", "max_concat_elems",
     "DiagStats", "compute_diagnostics", "smoothed_loss", "estimate_smoothness",
     "learner_mean", "learner_var",

@@ -36,6 +36,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import topology as topo
 from .flatstate import flat_meta
@@ -43,19 +44,29 @@ from .util import tree_gaussian_like, learner_mean
 
 __all__ = ["AlgoConfig", "mix_einsum", "mix_ppermute_ring", "mix_ppermute_pair",
            "mix_ppermute_ring_flat", "mix_ppermute_pair_flat",
+           "mix_ppermute_schedule", "mix_ppermute_schedule_flat",
            "perturb_weights", "pair_partners", "mix_pair_gather",
            "straggler_active_mask"]
 
 
 @dataclasses.dataclass(frozen=True)
 class AlgoConfig:
-    """How the learners talk to each other."""
+    """How the learners talk to each other.
+
+    ``topology`` names a compiled GossipSchedule (core/schedule.py):
+    static graphs (full | ring | torus | hierarchical | exp), time-varying
+    ones (one_peer_exp | random_pair | random_matching), or solo (no
+    mixing).  ``gossip_rounds`` is the multi-round mixing depth for
+    ``random_matching`` (each round redraws the matching before the
+    descent — Stich-style extra mixing for large-batch runs).
+    """
     algo: str = "dpsgd"            # dpsgd | ssgd | ssgd_star | adpsgd
-    topology: str = "random_pair"  # full | ring | torus | random_pair | solo
+    topology: str = "random_pair"  # see core/schedule.SCHEDULED_TOPOLOGIES
     gossip_backend: str = "einsum"  # einsum | ppermute
     gossip_order: str = "mix_then_descend"  # paper Eq. 2; or descend_then_mix
     noise_std: float = 0.01        # sigma_0 for ssgd_star
     n_learners: int = 16
+    gossip_rounds: int = 1         # mixing rounds per step (random_matching)
     # -- adpsgd only --------------------------------------------------------
     max_staleness: int = 0         # staleness bound tau (ticks); 0 == sync
     slow_learner: int = -1         # index of the injected straggler (-1: none)
@@ -65,6 +76,11 @@ class AlgoConfig:
         assert self.algo in ("dpsgd", "ssgd", "ssgd_star", "adpsgd"), self.algo
         assert self.gossip_order in ("mix_then_descend", "descend_then_mix")
         assert self.gossip_backend in ("einsum", "ppermute")
+        assert self.gossip_rounds >= 1, self.gossip_rounds
+        assert self.gossip_rounds == 1 or self.topology == "random_matching", \
+            ("gossip_rounds only parameterizes random_matching — other "
+             "schedules fix their own round structure (it would be "
+             "silently ignored)")
         assert self.max_staleness >= 0, self.max_staleness
         assert self.slow_factor >= 1, self.slow_factor
         assert -1 <= self.slow_learner < self.n_learners, self.slow_learner
@@ -73,6 +89,8 @@ class AlgoConfig:
                 "adpsgd gossips pairwise; use topology='random_pair'"
             assert self.gossip_order == "mix_then_descend", \
                 "adpsgd only supports the paper Eq. 2 ordering"
+            assert self.gossip_rounds == 1, \
+                "adpsgd's async tick is one pairwise exchange"
 
 
 # ---------------------------------------------------------------------------
@@ -198,6 +216,97 @@ def mix_ppermute_pair_flat(stacked, axis_names, step, remote=None):
     branches = [make_branch(b) for b in range(log_n)]
     mixed = jax.lax.switch(step % log_n, branches, (v, r))
     return meta.unflatten(mixed)
+
+
+def _schedule_perms(schedule):
+    """Per (round, neighbor-slot) ppermute pair lists from a compiled
+    deterministic schedule; ``None`` marks a padded self-loop slot (no
+    collective is issued for it)."""
+    assert not schedule.randomized, \
+        "a random matching cannot be a compiled collective schedule"
+    assert schedule.perm_rounds, schedule.name
+    n = schedule.n
+    idx = np.arange(n)
+    perms = []
+    for r in range(schedule.period):
+        slots = []
+        for k in range(schedule.K):
+            p = np.asarray(schedule.partners[r, k])
+            if (p == idx).all() and not schedule.coefs[r][:, 1 + k].any():
+                slots.append(None)            # padding: skip the collective
+            else:
+                # dest i reads partners[k, i] -> perm pairs (src, dst)
+                slots.append([(int(p[i]), i) for i in range(n)])
+        perms.append(slots)
+    return perms
+
+
+def _schedule_round_mix(x, axis_names, schedule, perms, r: int, idx):
+    """One STATIC round ``r`` of the schedule on a local array ``x``:
+    gather each neighbor slot with a collective-permute and accumulate in
+    f32 with the same term order as the fused kernel/einsum tables."""
+    coefs = jnp.asarray(schedule.coefs[r])
+    acc = coefs[idx, 0] * x.astype(jnp.float32)
+    for k, perm in enumerate(perms[r]):
+        if perm is None:
+            continue
+        other = jax.lax.ppermute(x, axis_names, perm)
+        acc = acc + coefs[idx, 1 + k] * other.astype(jnp.float32)
+    return acc
+
+
+def _schedule_mix_rounds(x, axis_names, step, schedule, perms, idx):
+    """All rounds one step executes (f32 result).  Whole-cycle schedules
+    unroll statically; a time-varying one (one-peer exponential) selects
+    its round by ``step`` with lax.switch — same pattern as
+    mix_ppermute_pair's hypercube branch table."""
+    from functools import partial as _partial
+    for j in range(schedule.rounds_per_step):
+        if not schedule.time_varying:
+            x = _schedule_round_mix(x, axis_names, schedule, perms,
+                                    j % schedule.period, idx)
+        else:
+            r = (step * schedule.rounds_per_step + j) % schedule.period
+            branches = [_partial(_schedule_round_mix, axis_names=axis_names,
+                                 schedule=schedule, perms=perms, r=rr,
+                                 idx=idx)
+                        for rr in range(schedule.period)]
+            x = jax.lax.switch(r, branches, x)
+    return x
+
+
+def mix_ppermute_schedule(stacked, axis_names, step, schedule):
+    """Schedule-driven K-neighbor gossip via collective-permute, per leaf.
+
+    The permutation sequence is derived from the SAME compiled tables the
+    fused kernel consumes (every deterministic schedule guarantees each
+    partner row is a permutation), so the SPMD path and the research path
+    realize the identical mixing matrix — parity-pinned against
+    ``schedule.step_matrix`` in tests.  Call inside shard_map; leaves have
+    no learner dim locally.
+    """
+    perms = _schedule_perms(schedule)
+    idx = jax.lax.axis_index(axis_names)
+
+    def _mix(x):
+        out = _schedule_mix_rounds(x, axis_names, step, schedule, perms, idx)
+        return out.astype(x.dtype)
+    return jax.tree_util.tree_map(_mix, stacked)
+
+
+def mix_ppermute_schedule_flat(stacked, axis_names, step, schedule):
+    """Flat-store variant of mix_ppermute_schedule (DESIGN §11/§12): one
+    lane-aligned (T_local, 128) buffer per collective instead of one
+    collective per leaf — K permutes per round regardless of leaf count.
+    The first hop moves the params' own wire dtype; multi-round schedules
+    keep the running mix in f32 between rounds (the arithmetic is f32
+    everywhere, exactly like the per-leaf path)."""
+    perms = _schedule_perms(schedule)
+    idx = jax.lax.axis_index(axis_names)
+    meta = flat_meta(stacked)
+    v = meta.flatten(stacked, dtype=meta.wire_dtype())
+    out = _schedule_mix_rounds(v, axis_names, step, schedule, perms, idx)
+    return meta.unflatten(out)
 
 
 # ---------------------------------------------------------------------------

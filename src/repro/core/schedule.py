@@ -1,0 +1,424 @@
+"""GossipSchedule: compiled time-varying K-neighbor gossip schedules.
+
+The paper's landscape-dependent noise (and hence the self-adjusting
+effective LR, Eq. 3-4) is set by the gossip matrix: sparser, faster-mixing
+graphs trade consensus distance against noise scale, and the
+topology/staleness schedule is the lever for large-batch convergence
+(DecentLaM, Yuan et al. 2021; exponential graphs, Ying et al. 2021).
+
+This module compiles every supported topology — static *and* time-varying —
+into one uniform executable form that the fused flat-engine kernel
+(kernels/gossip_mix.py, DESIGN §11/§12) consumes directly:
+
+    per round r:  partners[r]  (K, n) int32   neighbor index table
+                  coefs[r]     (n, K+1) f32   [self, neighbor...] weights
+
+A *round* is one neighbor-gather mix ``w_i <- c_i0 w_i + sum_k c_ik
+w_{partners[k,i]}``; a *step* executes ``rounds_per_step`` rounds (multi-round
+mixing) and the whole cycle repeats with period ``period``.  K is static
+(rounds with fewer neighbors are padded with zero-weight self-loops), so one
+compiled kernel serves the entire schedule.  Deterministic schedules
+additionally guarantee every partner row is a permutation of ``range(n)``
+(``perm_rounds``), which is exactly the form ``jax.lax.ppermute`` needs — the
+SPMD launch path derives its collective-permute sequence from the same
+tables (core/dpsgd.mix_ppermute_schedule*).
+
+Supported schedules (``make_schedule``):
+
+  ring            static, K=2 (K=1 at n=2): self 1/3, both ring neighbors 1/3.
+  torus           static, K=4: 2-D torus shifts, weight 1/5 each.
+  full            compiled to K rounds: power-of-two n runs the hypercube
+                  matching sequence (log2 n rounds of pairwise averaging whose
+                  product is EXACTLY the 1/n all-to-all matrix); other n run a
+                  single K=n-1 round with uniform 1/n weights.
+  hierarchical    2 rounds (paper App. F): intra-group full average, then the
+                  ring-of-groups mix; the product equals
+                  topology.hierarchical_matrix == kron(ring(S), J_g/g).
+  exp             static exponential graph: neighbors (i + 2^j) mod n for
+                  j < ceil(log2 n); self 1/2, each neighbor 1/(2*tau).
+                  Doubly stochastic (circulant), not symmetric in general.
+  one_peer_exp    one-peer exponential: round t averages with the single
+                  neighbor (i + 2^(t mod tau)) mod n with weight 1/2.  Its
+                  per-round matrices AVERAGE to the static `exp` matrix over
+                  one period (pinned by the conformance suite).
+  random_pair     the paper's production recipe: a fresh random perfect
+                  matching each step (K=1), drawn from the step key.
+  random_matching random_pair with ``rounds`` rounds of multi-round mixing
+                  per step (each round redraws the matching).
+  solo            no mixing — ``make_schedule`` returns None.
+
+Every realized per-step mixing matrix is doubly stochastic; ``symmetric``
+records whether it is also symmetric (checked numerically at compile time
+for deterministic schedules).  ``spectral_gap_profile`` measures the actual
+consensus contraction of a schedule over a window against the product of
+per-step 1-λ₂ bounds — the number benchmarks/ablation_topology.py reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import topology as topo
+
+__all__ = ["GossipSchedule", "make_schedule", "spectral_gap_profile",
+           "SCHEDULED_TOPOLOGIES", "DETERMINISTIC_TOPOLOGIES"]
+
+# every topology make_schedule compiles (solo compiles to None on purpose)
+SCHEDULED_TOPOLOGIES = ("full", "ring", "torus", "random_pair",
+                        "hierarchical", "exp", "one_peer_exp",
+                        "random_matching")
+DETERMINISTIC_TOPOLOGIES = ("full", "ring", "torus", "hierarchical", "exp",
+                            "one_peer_exp")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GossipSchedule:
+    """Compiled schedule: static metadata + per-round index/coef tables.
+
+    ``eq=False``: instances hold ndarrays and are identity-compared; jitted
+    steps close over them (the tables are constants, never traced operands
+    except through ``jnp.asarray`` indexing).
+    """
+    name: str
+    n: int
+    K: int                     # static neighbor count (self-loop padded)
+    period: int                # distinct rounds in the repeating cycle
+    rounds_per_step: int       # rounds executed per train step
+    randomized: bool           # matchings drawn from the step key
+    symmetric: bool            # every realized per-STEP matrix symmetric
+    perm_rounds: bool          # every partner row is a permutation (ppermute)
+    partners: np.ndarray       # (period, K, n) int32
+    coefs: np.ndarray          # (period, n, K+1) f32
+    step_mats: Optional[np.ndarray]  # (variants, n, n) f32; None if randomized
+
+    # -- classification -----------------------------------------------------
+    @property
+    def time_varying(self) -> bool:
+        """True when the realized per-step matrix changes across steps.
+
+        A schedule whose step runs a whole number of cycles (ring, torus,
+        full-as-rounds, hierarchical, exp) realizes the SAME matrix every
+        step and is static; one-peer exponential (one round of a longer
+        cycle per step) and the random matchings vary.
+        """
+        return self.randomized or self.rounds_per_step % self.period != 0
+
+    # -- per-round tables (the fused kernel's operands) ----------------------
+    def round_tables(self, key: Optional[jax.Array], r):
+        """Tables for global round ``r``: (partners (K, n) i32, coefs
+        (n, K+1) f32).  ``r`` may be a traced array for deterministic
+        schedules; randomized schedules draw the matching from ``key``
+        (round indexing is the caller's job — see ``step_rounds``)."""
+        if self.randomized:
+            partner = topo.pair_partners(key, self.n)
+            solo = partner == jnp.arange(self.n)
+            self_c = jnp.where(solo, 1.0, 0.5).astype(jnp.float32)
+            return (partner[None].astype(jnp.int32),
+                    jnp.stack([self_c, 1.0 - self_c], axis=1))
+        if self.period == 1:
+            return jnp.asarray(self.partners[0]), jnp.asarray(self.coefs[0])
+        idx = r % self.period
+        return jnp.asarray(self.partners)[idx], jnp.asarray(self.coefs)[idx]
+
+    def step_rounds(self, key: Optional[jax.Array], step) -> List[Tuple]:
+        """All rounds executed at ``step``, in execution order.
+
+        Deterministic schedules index the compiled tables at
+        ``(step * rounds_per_step + j) % period`` (a static index whenever
+        the step runs whole cycles); randomized ones fold the step key per
+        round — round 0 uses the raw key, so a 1-round random matching is
+        bit-identical to the legacy ``pair_partners(key, n)`` draw.
+        """
+        out = []
+        for j in range(self.rounds_per_step):
+            if self.randomized:
+                kj = key if j == 0 else jax.random.fold_in(key, j)
+                out.append(self.round_tables(kj, j))
+            elif not self.time_varying:
+                out.append(self.round_tables(key, j % self.period))
+            else:
+                out.append(self.round_tables(
+                    key, step * self.rounds_per_step + j))
+        return out
+
+    # -- matrix realization (einsum fallback path + conformance tests) -------
+    def step_matrix(self, key: Optional[jax.Array], step) -> jnp.ndarray:
+        """The (n, n) mixing matrix one step realizes (its rounds' product).
+
+        Jit-safe for traced ``step``; this is what the pytree/einsum paths
+        multiply by, and what the fused kernel path is parity-tested
+        against.
+        """
+        if self.randomized:
+            m = topo.random_pair_matrix(key, self.n)
+            for j in range(1, self.rounds_per_step):
+                kj = jax.random.fold_in(key, j)
+                m = topo.random_pair_matrix(kj, self.n) @ m
+            return m
+        mats = jnp.asarray(self.step_mats)
+        if self.step_mats.shape[0] == 1:
+            return mats[0]
+        return mats[step % self.step_mats.shape[0]]
+
+    def mean_matrix(self) -> np.ndarray:
+        """Period-average of the per-step matrices (deterministic only) —
+        the ergodic mixing matrix a time-varying schedule realizes in
+        expectation over its cycle."""
+        assert not self.randomized, "randomized schedules have no fixed mean"
+        return np.asarray(self.step_mats, np.float64).mean(0)
+
+
+# ---------------------------------------------------------------------------
+# compilation
+# ---------------------------------------------------------------------------
+
+def _round_matrix(partners_r: np.ndarray, coefs_r: np.ndarray) -> np.ndarray:
+    """(K, n) partners + (n, K+1) coefs -> dense (n, n) f64 mixing matrix."""
+    n = partners_r.shape[1]
+    m = np.zeros((n, n))
+    m[np.arange(n), np.arange(n)] += coefs_r[:, 0].astype(np.float64)
+    for k in range(partners_r.shape[0]):
+        # each row writes one (i, partner) entry -> plain fancy += is exact
+        m[np.arange(n), partners_r[k]] += coefs_r[:, 1 + k].astype(np.float64)
+    return m
+
+
+def _compile(name: str, n: int, rounds: List[Tuple[np.ndarray, np.ndarray]],
+             rounds_per_step: int) -> GossipSchedule:
+    """Pad per-round tables to a common static K, realize the matrices,
+    and validate the schedule contract (double stochasticity, permutation
+    rows) once, at compile time."""
+    K = max(p.shape[0] for p, _ in rounds)
+    period = len(rounds)
+    partners = np.tile(np.arange(n, dtype=np.int32), (period, K, 1))
+    coefs = np.zeros((period, n, K + 1), np.float32)
+    for r, (p, c) in enumerate(rounds):
+        kr = p.shape[0]
+        partners[r, :kr] = p.astype(np.int32)
+        coefs[r, :, 0] = c[:, 0]
+        coefs[r, :, 1:1 + kr] = c[:, 1:]
+
+    perm = all((np.sort(partners[r, k]) == np.arange(n)).all()
+               for r in range(period) for k in range(K))
+    round_mats = [_round_matrix(partners[r], coefs[r]) for r in range(period)]
+    for r, m in enumerate(round_mats):
+        assert topo.is_doubly_stochastic(m), (name, r)
+
+    variants = (1 if rounds_per_step % period == 0
+                else period // math.gcd(period, rounds_per_step))
+    step_mats = []
+    for v in range(variants):
+        m = np.eye(n)
+        for j in range(rounds_per_step):
+            m = round_mats[(v * rounds_per_step + j) % period] @ m
+        step_mats.append(m)
+    step_mats = np.asarray(step_mats)
+    symmetric = bool(np.allclose(step_mats, step_mats.transpose(0, 2, 1),
+                                 atol=1e-12))
+    return GossipSchedule(
+        name=name, n=n, K=K, period=period, rounds_per_step=rounds_per_step,
+        randomized=False, symmetric=symmetric, perm_rounds=perm,
+        partners=partners, coefs=coefs,
+        step_mats=step_mats.astype(np.float32))
+
+
+def _shift_round(n: int, shifts, weights, self_weight: float):
+    """Round built from circulant index shifts: partner k of i is
+    (i + shifts[k]) % n with weight weights[k]; every row is a shift
+    permutation, so the round is ppermute-able by construction."""
+    idx = np.arange(n)
+    partners = np.stack([(idx + s) % n for s in shifts]).astype(np.int32)
+    coefs = np.concatenate(
+        [np.full((n, 1), self_weight),
+         np.tile(np.asarray(weights, np.float64)[None, :], (n, 1))],
+        axis=1).astype(np.float32)
+    return partners, coefs
+
+
+def _ring_rounds(n: int):
+    if n == 2:
+        return [_shift_round(2, [1], [0.5], 0.5)]
+    side = (1.0 - 1.0 / 3.0) / 2.0
+    return [_shift_round(n, [1, n - 1], [side, side], 1.0 / 3.0)]
+
+
+def _torus_rounds(n: int):
+    r = int(np.sqrt(n))
+    while n % r:
+        r -= 1
+    rows, cols = r, n // r
+    idx = np.arange(n)
+    rr, cc = idx // cols, idx % cols
+    def grid(dr, dc):
+        return (((rr + dr) % rows) * cols + (cc + dc) % cols).astype(np.int32)
+    partners = np.stack([grid(1, 0), grid(-1, 0), grid(0, 1), grid(0, -1)])
+    coefs = np.full((n, 5), 1.0 / 5.0, np.float32)
+    return [(partners, coefs)]
+
+
+def _full_rounds(n: int):
+    if n & (n - 1) == 0:       # hypercube: product of log2 n pairings == 1/n
+        idx = np.arange(n)
+        out = []
+        for b in range(int(math.log2(n))):
+            partners = (idx ^ (1 << b)).astype(np.int32)[None]
+            coefs = np.full((n, 2), 0.5, np.float32)
+            out.append((partners, coefs))
+        return out
+    return [_shift_round(n, list(range(1, n)), [1.0 / n] * (n - 1), 1.0 / n)]
+
+
+def _hier_dims(n: int) -> Tuple[int, int]:
+    g = int(np.sqrt(n))
+    while n % g:
+        g -= 1
+    return n // g, g            # (n_super, group)
+
+
+def _hierarchical_rounds(n: int):
+    S, g = _hier_dims(n)
+    if g == 1:                  # no intra grouping possible: plain ring
+        return _ring_rounds(n)
+    if S == 1:                  # one group: plain full average
+        return _full_rounds(n)
+    idx = np.arange(n)
+    grp, mem = idx // g, idx % g
+
+    def slot(d, s):
+        return (((grp + d) % S) * g + (mem + s) % g).astype(np.int32)
+
+    # round 0: intra-group full average
+    intra_p = np.stack([slot(0, s) for s in range(1, g)])
+    intra_c = np.full((n, g), 1.0 / g, np.float32)
+    # round 1: ring across super-learners, uniform within the remote group
+    ring_row = np.asarray(topo.ring_matrix(S), np.float64)[0]
+    slots, weights = [], []
+    for d in range(S):
+        if ring_row[d] <= 0:
+            continue
+        for s in range(g):
+            if d == 0 and s == 0:
+                continue        # the self slot
+            slots.append(slot(d, s))
+            weights.append(ring_row[d] / g)
+    inter_p = np.stack(slots)
+    inter_c = np.concatenate(
+        [np.full((n, 1), ring_row[0] / g),
+         np.tile(np.asarray(weights, np.float64)[None, :], (n, 1))],
+        axis=1).astype(np.float32)
+    return [(intra_p, intra_c), (inter_p, inter_c)]
+
+
+def _exp_tau(n: int) -> int:
+    return max(1, int(math.ceil(math.log2(n))))
+
+
+def _exp_rounds(n: int):
+    tau = _exp_tau(n)
+    shifts = [(1 << j) % n for j in range(tau)]
+    return [_shift_round(n, shifts, [1.0 / (2 * tau)] * tau, 0.5)]
+
+
+def _one_peer_exp_rounds(n: int):
+    tau = _exp_tau(n)
+    return [_shift_round(n, [(1 << j) % n], [0.5], 0.5) for j in range(tau)]
+
+
+def make_schedule(topology: str, n: int, *,
+                  rounds: int = 1) -> Optional[GossipSchedule]:
+    """Compile ``topology`` for ``n`` learners; ``rounds`` is the
+    multi-round mixing depth for ``random_matching``.  Returns None for
+    ``solo`` (and any n <= 1, where every schedule degenerates to the
+    identity); raises ValueError for unknown topologies."""
+    topology = topology.lower()
+    if topology not in SCHEDULED_TOPOLOGIES + ("solo",):
+        raise ValueError(f"unknown topology: {topology}")
+    if topology == "solo" or n <= 1:
+        return None
+    if topology in ("random_pair", "random_matching"):
+        r = 1 if topology == "random_pair" else max(1, rounds)
+        return GossipSchedule(
+            name=topology, n=n, K=1, period=1, rounds_per_step=r,
+            # each matching is symmetric, but the product of two DIFFERENT
+            # matchings is not — only the 1-round step matrix is symmetric
+            randomized=True, symmetric=r == 1, perm_rounds=True,
+            partners=np.tile(np.arange(n, dtype=np.int32), (1, 1, 1)),
+            coefs=np.concatenate([np.ones((1, n, 1), np.float32),
+                                  np.zeros((1, n, 1), np.float32)], axis=-1),
+            step_mats=None)
+    builders = {"ring": _ring_rounds, "torus": _torus_rounds,
+                "full": _full_rounds, "hierarchical": _hierarchical_rounds,
+                "exp": _exp_rounds, "one_peer_exp": _one_peer_exp_rounds}
+    round_list = builders[topology](n)
+    # one-peer exponential runs ONE round of its cycle per step (that is
+    # the point: O(P) traffic per step); the multi-round compilations
+    # (full-as-rounds, hierarchical) execute their whole cycle each step
+    rps = 1 if topology == "one_peer_exp" else len(round_list)
+    return _compile(topology, n, round_list, rps)
+
+
+# ---------------------------------------------------------------------------
+# analyzer: measured consensus contraction vs the spectral-gap bound
+# ---------------------------------------------------------------------------
+
+def spectral_gap_profile(schedule: Optional[GossipSchedule], *,
+                         window: int = 0, key: Optional[jax.Array] = None,
+                         seed: int = 0, floor: float = 1e-6) -> dict:
+    """Measure a schedule's consensus contraction over ``window`` steps.
+
+    For each step matrix M_t the per-step contraction factor on the
+    disagreement subspace is eta_t = ||M_t - J||_2 (J = 11^T/n; for a
+    symmetric doubly stochastic M this is exactly |λ₂|, so 1 - eta is the
+    classical spectral gap).  Submultiplicativity gives the *bound*
+    ||Φ - J||_2 <= prod eta_t for the window product Φ; the *measured* rate
+    is the actual ||Φ - J||_2^(1/window).  Time-varying schedules typically
+    beat their per-step bound — that gap is the point of the analyzer (and
+    the `measured_gap >= gap_bound` column in benchmarks/ablation_topology).
+
+    Returns per-step gaps plus geometric-mean rates:
+      measured_rate <= bound_rate,  measured_gap = 1 - measured_rate,
+      gap_bound = 1 - bound_rate.
+    ``schedule=None`` (solo) profiles the identity: no contraction.
+
+    Precision floor: the tables are f32, so a window that mixes below
+    ~1e-7 disagreement is unresolvable — the accumulated representation
+    noise stops contracting while the exact λ₂-product keeps shrinking,
+    which would invert the guaranteed inequality.  Both norms are clamped
+    at ``floor`` (default 1e-6) before the W-th root, which preserves
+    ``measured_rate <= bound_rate`` on fully-mixed windows and leaves
+    slower schedules untouched.
+    """
+    if schedule is None:
+        w = max(window, 1)
+        return {"window": w, "per_step_gap": [0.0] * w,
+                "measured_rate": 1.0, "bound_rate": 1.0,
+                "measured_gap": 0.0, "gap_bound": 0.0}
+    n = schedule.n
+    if not window:
+        window = max(8, 2 * max(
+            1, schedule.period // math.gcd(schedule.period,
+                                           schedule.rounds_per_step)))
+    if key is None:
+        key = jax.random.PRNGKey(seed)
+    J = np.full((n, n), 1.0 / n)
+    phi = np.eye(n)
+    etas, gaps = [], []
+    for t in range(window):
+        kt = jax.random.fold_in(key, t)
+        m = np.asarray(schedule.step_matrix(kt, t), np.float64)
+        phi = m @ phi
+        eta = float(np.linalg.norm(m - J, 2))
+        etas.append(eta)
+        gaps.append(1.0 - eta)
+    measured_rate = max(float(np.linalg.norm(phi - J, 2)),
+                        floor) ** (1.0 / window)
+    bound_rate = max(float(np.prod(etas)), floor) ** (1.0 / window)
+    return {"window": window, "per_step_gap": gaps,
+            "measured_rate": measured_rate, "bound_rate": bound_rate,
+            "measured_gap": 1.0 - measured_rate,
+            "gap_bound": 1.0 - bound_rate}

@@ -22,6 +22,7 @@ __all__ = [
     "pair_partners",
     "random_pair_matrix",
     "hierarchical_matrix",
+    "exponential_matrix",
     "is_doubly_stochastic",
     "spectral_gap",
     "make_mixing_fn",
@@ -106,6 +107,21 @@ def hierarchical_matrix(n_super: int, group: int, inner: str = "full",
     return jnp.asarray(m, dtype=dtype)
 
 
+def exponential_matrix(n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Static exponential graph (Ying et al. 2021): neighbors at offsets
+    2^0..2^(tau-1) (tau = ceil(log2 n)), self weight 1/2, each neighbor
+    1/(2 tau).  Doubly stochastic (circulant), NOT symmetric in general —
+    it is the period-average of the one-peer exponential schedule
+    (core/schedule.py), which is how that normalization is pinned."""
+    if n <= 1:
+        return jnp.ones((1, 1), dtype)
+    tau = max(1, int(np.ceil(np.log2(n))))
+    m = 0.5 * np.eye(n)
+    for j in range(tau):
+        m += np.roll(np.eye(n), (1 << j) % n, axis=1) / (2 * tau)
+    return jnp.asarray(m, dtype=dtype)
+
+
 def is_doubly_stochastic(m, atol: float = 1e-5) -> bool:
     m = np.asarray(m, dtype=np.float64)
     return (np.all(m >= -atol)
@@ -140,7 +156,18 @@ def make_mixing_fn(topology: str, n: int):
         return lambda key: m
     if topology == "random_pair":
         return lambda key: random_pair_matrix(key, n)
+    if topology == "hierarchical":
+        g = int(np.sqrt(n))
+        while n % g:
+            g -= 1
+        m = hierarchical_matrix(n // g, g) if 1 < g < n else ring_matrix(n)
+        return lambda key: m
+    if topology == "exp":
+        m = exponential_matrix(n)
+        return lambda key: m
     if topology == "solo":  # no mixing at all (local SGD w/o averaging)
         m = jnp.eye(n)
         return lambda key: m
+    # time-varying schedules (one_peer_exp, random_matching) have no single
+    # per-key matrix — compile them with core.schedule.make_schedule instead
     raise ValueError(f"unknown topology: {topology}")

@@ -41,7 +41,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from . import topology as topo
+from . import schedule as gsched
 from .diagnostics import DiagStats, compute_diagnostics
 from .dpsgd import (AlgoConfig, mean_broadcast, mix_einsum, mix_pair_gather,
                     pair_partners, perturb_weights, straggler_active_mask)
@@ -104,11 +104,28 @@ class MultiLearnerTrainer:
     kernel_backend: str = "auto"   # auto | pallas | ref (flat-engine dispatch)
 
     def __post_init__(self):
-        self._mix_fn = topo.make_mixing_fn(self.algo.topology, self.algo.n_learners)
+        # compile the topology into its GossipSchedule (DESIGN §12): the
+        # per-round static-K partner/coef tables every mixing path — fused
+        # kernel, einsum fallback, SPMD ppermute — derives from.  None for
+        # 'solo' (identity mixing); unknown topologies raise here.
+        self._schedule = gsched.make_schedule(
+            self.algo.topology, self.algo.n_learners,
+            rounds=self.algo.gossip_rounds)
         if (getattr(self.optimizer, "wants_mixed", False)
                 and self.algo.gossip_order != "mix_then_descend"):
             raise ValueError("decentlam-style optimizers need the gossip "
                              "average: use gossip_order='mix_then_descend'")
+        if (getattr(self.optimizer, "wants_mixed", False)
+                and getattr(self.optimizer, "static_mixing_only", False)
+                and self._schedule is not None
+                and self._schedule.time_varying):
+            raise ValueError(
+                f"this optimizer's correction assumes a STATIC mixing "
+                f"matrix, but topology='{self.algo.topology}' compiles to a "
+                "time-varying GossipSchedule — the exact DecentLaM drift "
+                "diverges under switching matchings (see optim/decentlam.py)."
+                " Use drift_scale=1-momentum, a static topology, or "
+                "unsafe_switching=True to demonstrate the divergence")
         assert self.engine in ("auto", "flat", "pytree"), self.engine
         assert self.kernel_backend in ("auto", "pallas", "ref"), \
             self.kernel_backend
@@ -132,17 +149,19 @@ class MultiLearnerTrainer:
                     "layer-wise trust ratio) — the flat engine would "
                     "silently change its semantics; use engine='pytree'")
             self._flat = self.engine == "flat"
-        # fused kernel path: plain (momentum-)SGD on a pairwise/ring gossip
-        # schedule (SSGD has no gossip to fuse — its flat step is generic)
+        # fused kernel path: plain (momentum-)SGD on ANY compiled gossip
+        # schedule — every topology make_schedule covers dispatches the
+        # batched Pallas/oracle kernel, multi-round schedules running their
+        # leading rounds as mixing-only kernel passes (DESIGN §12).  SSGD
+        # has no gossip to fuse (generic flat step); 'solo' has no schedule;
+        # a wants_mixed optimizer (decentlam) needs the unfused update.
         f = getattr(self.optimizer, "fused", None)
         self._fused = None
         if (self._flat and f is not None
                 and self.algo.algo in ("dpsgd", "adpsgd")
                 and not getattr(self.optimizer, "wants_mixed", False)
                 and self.algo.gossip_order == "mix_then_descend"
-                and (self.algo.topology == "random_pair"
-                     or (self.algo.topology == "ring"
-                         and self.algo.n_learners >= 3))):
+                and self._schedule is not None):
             self._fused = f
         self._meta: Optional[FlatMeta] = None   # set at init()
         # jit once per trainer instance (self is not hashable -> close over
@@ -253,14 +272,9 @@ class MultiLearnerTrainer:
         return jax.vmap(self.optimizer.update)(grads, opt_state, params)
 
     # -- flat-engine pieces ---------------------------------------------------
-    def _pair_coefs(self, partner):
-        """(n, 2) [self, neighbor] mixing weights; solo learners keep w."""
-        solo = partner == jnp.arange(partner.shape[0])
-        self_c = jnp.where(solo, 1.0, 0.5).astype(jnp.float32)
-        return jnp.stack([self_c, 1.0 - self_c], axis=1)
-
     def _fused_step(self, w, remote, grads, opt_state, partners, coefs,
-                    active=None, buffer=None, nbr_fresh=None, publish=None):
+                    active=None, buffer=None, nbr_fresh=None, publish=None,
+                    weight_decay=None):
         """Dispatch the batched gossip+SGD kernel and thread the opt state.
 
         ``active`` (adpsgd): the kernel applies the straggler select to the
@@ -269,6 +283,9 @@ class MultiLearnerTrainer:
         ``nbr_fresh``/``publish`` switch on the AD-PSGD publish mode: the
         stale-remote select and the published-buffer rewrite also happen
         inside the kernel, so the tick makes one pass over the parameters.
+        ``weight_decay`` overrides the optimizer's static recipe (the
+        multi-round path passes 0 after folding the decay of the PRE-mix
+        weights into the gradients — the kernel only sees the mixed w).
         Returns (w_new, opt_state[, buffer_new]).
         """
         from ..kernels import ops as kops
@@ -284,9 +301,10 @@ class MultiLearnerTrainer:
                      publish.astype(jnp.float32)[:, None]]
         coefs = jnp.concatenate(cols, axis=1)
         mu = f.read_mu(opt_state)
+        wd = f.weight_decay if weight_decay is None else weight_decay
         out = kops.flat_gossip_update(
             w, remote, grads, mu, partners, coefs, lr=f.lr, beta=f.beta,
-            weight_decay=f.weight_decay, buffer=buffer,
+            weight_decay=wd, buffer=buffer,
             backend=self.kernel_backend)
         w_new, mu_new = out[0], out[1]
         opt_state = f.bump(opt_state)
@@ -309,10 +327,27 @@ class MultiLearnerTrainer:
             return jnp.where(m, a, b)
         return jax.tree_util.tree_map(_sel, new, old)
 
-    def _mix_flat(self, w, key):
-        if self.algo.topology == "random_pair":
-            return mix_pair_gather(w, pair_partners(key, self.algo.n_learners))
-        return mix_einsum(w, self._mix_fn(key))
+    def _mix_sched(self, stacked, key, step):
+        """Schedule-driven gossip for the UNFUSED paths (pytree engine and
+        the flat engine's generic-optimizer fallback) — works on stacked
+        pytrees and on the raw (n, T, 128) buffer alike.
+
+        Random matchings keep the O(P) gather form (round 0 draws from the
+        raw step key, so sync pairwise DPSGD stays bitwise-stable vs PR 1);
+        deterministic schedules multiply by the compiled per-step matrix
+        (the whole multi-round product in ONE einsum).
+        """
+        s = self._schedule
+        if s is None:                     # solo: identity mixing
+            return stacked
+        if s.randomized:
+            out = stacked
+            for j in range(s.rounds_per_step):
+                kj = key if j == 0 else jax.random.fold_in(key, j)
+                out = mix_pair_gather(
+                    out, pair_partners(kj, self.algo.n_learners))
+            return out
+        return mix_einsum(stacked, s.step_matrix(key, step))
 
     # -- one training step ----------------------------------------------------
     def _train_step(self, state: TrainState, stacked_batch):
@@ -366,22 +401,19 @@ class MultiLearnerTrainer:
             # gradients at LOCAL weights (the whole point of the paper)
             losses, grads = jax.vmap(grad_fn)(state.params, stacked_batch)
             if algo.gossip_order == "mix_then_descend":   # paper Eq. 2
-                if algo.topology == "random_pair":
-                    # gather form of the random matching: O(P) instead of an
-                    # n x n einsum, and the reference AD-PSGD reduces to at
-                    # staleness 0 (bitwise — asserted in tests)
-                    mixed = mix_pair_gather(state.params,
-                                            pair_partners(k_mix, algo.n_learners))
-                else:
-                    mixed = mix_einsum(state.params, self._mix_fn(k_mix))
+                # _mix_sched keeps the gather form for random matchings
+                # (O(P), and the reference AD-PSGD reduces to it at
+                # staleness 0 — bitwise, asserted in tests) and the
+                # compiled per-step matrix for everything else
+                mixed = self._mix_sched(state.params, k_mix, state.step)
                 updates, opt_state = self._opt_update(
                     grads, state.opt_state, state.params, mixed)
                 new_params = apply_updates(mixed, updates)
             else:                                          # descend_then_mix
                 updates, opt_state = self._opt_update(
                     grads, state.opt_state, state.params, state.params)
-                new_params = mix_einsum(apply_updates(state.params, updates),
-                                        self._mix_fn(k_mix))
+                new_params = self._mix_sched(
+                    apply_updates(state.params, updates), k_mix, state.step)
 
         elif algo.algo == "adpsgd":
             # Async pairwise gossip, simulated one global tick at a time:
@@ -463,26 +495,39 @@ class MultiLearnerTrainer:
         elif algo.algo == "dpsgd":
             losses, grads = jax.vmap(grad_fn)(w, stacked_batch)
             if self._fused is not None:
-                if algo.topology == "random_pair":
-                    partner = pair_partners(k_mix, n)
-                    partners = partner[None].astype(jnp.int32)
-                    coefs = self._pair_coefs(partner)
-                else:                                   # ring, n >= 3
-                    idx = jnp.arange(n, dtype=jnp.int32)
-                    partners = jnp.stack([(idx + 1) % n, (idx - 1) % n])
-                    coefs = jnp.tile(
-                        jnp.float32(1.0 / 3.0), (n, 3))
+                # the compiled schedule's per-step rounds: leading rounds
+                # run as mixing-only kernel passes (multi-round schedules —
+                # full-as-rounds, hierarchical, random_matching), the LAST
+                # round fuses the momentum-SGD update into the same pass
+                from ..kernels import ops as kops
+                rounds = self._schedule.step_rounds(k_mix, state.step)
+                g_upd, wd = grads, None
+                if len(rounds) > 1 and self._fused.weight_decay:
+                    # weight decay regularizes the PRE-mix local weights
+                    # (what the pytree reference does); once the leading
+                    # rounds overwrite w the kernel would decay the mixed
+                    # buffer instead — fold it into the gradients here and
+                    # zero the kernel's own decay term (grads itself stays
+                    # raw: the grad_norm metric reads it below)
+                    g_upd = grads + self._fused.weight_decay * w
+                    wd = 0.0
+                for partners, coefs in rounds[:-1]:
+                    w = kops.flat_gossip_mix(w, partners, coefs,
+                                             backend=self.kernel_backend)
+                partners, coefs = rounds[-1]
                 new_params, opt_state = self._fused_step(
-                    w, w, grads, state.opt_state, partners, coefs)
+                    w, w, g_upd, state.opt_state, partners, coefs,
+                    weight_decay=wd)
             elif algo.gossip_order == "mix_then_descend":
-                mixed = self._mix_flat(w, k_mix)
+                mixed = self._mix_sched(w, k_mix, state.step)
                 updates, opt_state = self._opt_update(grads, state.opt_state,
                                                       w, mixed)
                 new_params = apply_updates(mixed, updates)
             else:                                       # descend_then_mix
                 updates, opt_state = self._opt_update(grads, state.opt_state,
                                                       w, w)
-                new_params = self._mix_flat(apply_updates(w, updates), k_mix)
+                new_params = self._mix_sched(apply_updates(w, updates),
+                                             k_mix, state.step)
 
         elif algo.algo == "adpsgd":
             active = straggler_active_mask(state.step, n, algo.slow_learner,
@@ -493,20 +538,26 @@ class MultiLearnerTrainer:
             stale_max = jnp.max(stale_seen).astype(jnp.float32)
 
             losses, grads = jax.vmap(grad_fn)(w, stacked_batch)
-            partner = pair_partners(k_mix, n)
             if self._fused is not None:
+                # the matching + solo-aware coefs come from the compiled
+                # schedule — ONE source of truth with the DPSGD fused path
+                # (the round-0 draw is the raw-key pair_partners, so the
+                # bitwise sync==async(tau=0) contract is table-for-table)
+                (partners, coefs), = self._schedule.step_rounds(k_mix,
+                                                                state.step)
+                partner = partners[0]
                 # publish-mode kernel: stale-remote select, straggler select
                 # AND the published-buffer rewrite all happen in the one
                 # parameter pass; only the small non-flat opt leaves (scale,
                 # schedule counters) still need the revert outside
                 new_params, opt_state_new, buffer = self._fused_step(
-                    w, w, grads, state.opt_state,
-                    partner[None].astype(jnp.int32), self._pair_coefs(partner),
+                    w, w, grads, state.opt_state, partners, coefs,
                     active=active, buffer=buffer,
                     nbr_fresh=fresh[partner], publish=active | fresh)
                 opt_state = self._select_nonflat(active, opt_state_new,
                                                  state.opt_state)
             else:
+                partner = pair_partners(k_mix, n)
                 remote = jnp.where(fresh[:, None, None], w, buffer)
                 mixed = mix_pair_gather(w, partner, remote)
                 updates, opt_state_new = self._opt_update(

@@ -17,7 +17,10 @@ intensity < 1 flop/byte — pure bandwidth).
 Layout: the parameter pytree is flattened to a (T, 128) f32 view (padded);
 neighbor copies arrive as (K, T, 128) — on a real pod these are the
 ppermute-received buffers, here they are explicit inputs so the kernel is
-topology-agnostic (K = #non-zero off-diagonal mixing weights, usually 1-2).
+topology-agnostic (K = #non-zero off-diagonal mixing weights — any static
+K: the compiled GossipSchedule tables in core/schedule.py pad every round
+to one fixed neighbor count, so pair matchings, rings, tori, exponential
+graphs and hierarchical rounds all dispatch the same kernel, DESIGN §12).
 """
 from __future__ import annotations
 
@@ -182,8 +185,12 @@ def gossip_mix_update_flat(w, remote, grads, momentum, partners, coefs, *,
               live weights for synchronous DPSGD — pass ``w`` itself to
               alias them).
     momentum: (n, T, 128) or ignored when ``has_momentum=False``.
-    partners: (K, n) int32 — neighbor learner index per schedule row
-              (pair matching: K=1; ring: K=2), consumed via scalar prefetch.
+    partners: (K, n) int32 — neighbor learner index per schedule row,
+              consumed via scalar prefetch.  K is any static neighbor
+              count: pair matching K=1, ring K=2, torus K=4, static
+              exponential K=ceil(log2 n), full-as-one-round K=n-1 — one
+              row of a compiled core/schedule.GossipSchedule (padded
+              self-loop slots carry coefficient 0).
     coefs:    (n, K + 3) f32 — [self, neighbor..., lr scale, active] per
               learner: a solo learner carries [1, 0, ...]; ``lr scale`` is
               the controller/schedule multiplier (one compiled kernel

@@ -131,6 +131,27 @@ def flat_gossip_update(w, remote, grads, momentum, partners, coefs, *,
     return w_new, mu_new
 
 
+def flat_gossip_mix(w, partners, coefs, *, backend: str = "auto"):
+    """One mixing-only gossip round on the flat (n, T, 128) store.
+
+    ``partners``: (K, n) int32; ``coefs``: (n, K + 1) f32 ``[self,
+    neighbors...]`` — exactly one row of a compiled GossipSchedule
+    (core/schedule.py).  Multi-round schedules (full-as-rounds,
+    hierarchical, random matching with ``gossip_rounds > 1``) run their
+    leading rounds through this and fuse the optimizer update into the
+    LAST round only.  Reuses the batched kernel with a zero learning rate
+    and ``w`` aliased as the (ignored) gradient operand, so arbitrary
+    static K rides the same scalar-prefetch hot path with no second kernel
+    to maintain.
+    """
+    n = w.shape[0]
+    pad = jnp.ones((n, 2), jnp.float32)          # [lr scale, active] = 1
+    full = jnp.concatenate([coefs.astype(jnp.float32), pad], axis=1)
+    out = flat_gossip_update(w, w, w, None, partners, full, lr=0.0,
+                             backend=backend)
+    return out[0]
+
+
 def dpsgd_fused_update(params_tree, neighbor_trees, grads_tree, momentum_tree,
                        coefs, *, lr: float, beta: float = 0.9):
     """Pytree-level fused gossip+momentum update (see kernels.gossip_mix).

@@ -26,7 +26,10 @@ def gossip_mix_update_flat_ref(w, remote, grads, momentum, partners, coefs, *,
     Mirrors the kernel's arithmetic order (self term first, neighbors in
     schedule order, fused lr scale, where-based active select, publish-mode
     neighbor/buffer selects) so the two stay bitwise-close in interpret
-    mode."""
+    mode.  K is arbitrary: the loop consumes one compiled GossipSchedule
+    round of any static neighbor count (padded self-loop slots contribute
+    coefficient-0 terms, exactly like the kernel); with ``lr=0.0`` this is
+    the mixing-only round ops.flat_gossip_mix dispatches."""
     K = partners.shape[0]
     publish = buffer is not None
     mixed = coefs[:, 0][:, None, None] * w

@@ -37,8 +37,9 @@ except AttributeError:                    # jax 0.4.x
 
 from ..core.dpsgd import (mix_einsum, mix_ppermute_pair,
                           mix_ppermute_pair_flat, mix_ppermute_ring,
-                          mix_ppermute_ring_flat, straggler_active_mask)
-from ..core.topology import random_pair_matrix, ring_matrix
+                          mix_ppermute_ring_flat, mix_ppermute_schedule,
+                          mix_ppermute_schedule_flat, straggler_active_mask)
+from ..core.schedule import make_schedule
 from ..models.model import ModelAPI
 from ..models.shard_hints import activation_batch_axes
 from ..optim import Optimizer, apply_updates
@@ -76,29 +77,49 @@ class PjitTrainState(NamedTuple):
 def make_dpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh,
                           topology: str = "random_pair",
                           gossip_backend: str = "einsum",
-                          gossip_fuse: str = "flat") -> Callable:
-    """``gossip_fuse`` (ppermute backend only): 'flat' permutes each
-    device's LOCAL parameter shard as one lane-aligned (T_local, 128)
-    buffer — 2 collective-permutes per step regardless of leaf count
-    (DESIGN §11); 'leaf' is the per-leaf reference collective schedule."""
+                          gossip_fuse: str = "flat",
+                          gossip_rounds: int = 1) -> Callable:
+    """``topology`` is compiled through core.schedule.make_schedule, so the
+    SPMD path runs the same GossipSchedule tables as the research trainer
+    (DESIGN §12).  ``gossip_backend='ppermute'``: deterministic schedules
+    (ring/torus/full/hierarchical/exp/one_peer_exp) derive their
+    collective-permute sequence straight from the schedule — K permutes per
+    round, parity-pinned against the einsum step matrix; random matchings
+    cannot be a compiled collective schedule, so they substitute the ring
+    (the pre-schedule behavior — use the einsum backend for true random
+    pairing under pjit).  ``gossip_fuse``: 'flat' permutes each device's
+    LOCAL parameter shard as one lane-aligned (T_local, 128) buffer —
+    collectives per step independent of leaf count (DESIGN §11); 'leaf' is
+    the per-leaf reference collective schedule."""
     L = n_learners(mesh)
     l_axes = learner_axes(mesh)
     assert gossip_fuse in ("flat", "leaf"), gossip_fuse
+    sched = make_schedule(topology, L, rounds=gossip_rounds)
+    if (getattr(optimizer, "wants_mixed", False)
+            and getattr(optimizer, "static_mixing_only", False)
+            and sched is not None and sched.time_varying):
+        raise ValueError(
+            f"optimizer assumes a static mixing matrix but "
+            f"topology='{topology}' compiles to a time-varying "
+            "GossipSchedule (see optim/decentlam.py)")
 
-    def gossip(params, key):
+    def gossip(params, key, step):
+        if sched is None:                      # solo: no mixing
+            return params
         if gossip_backend == "einsum":
-            if topology == "ring":
-                m = ring_matrix(L)
-            else:
-                m = random_pair_matrix(key, L)
-            return mix_einsum(params, m)
-        # ppermute ring inside shard_map (only the learner axes are mapped)
+            return mix_einsum(params, sched.step_matrix(key, step))
+        # schedule-driven gossip inside shard_map (only the learner axes
+        # are mapped)
         specs = shd.params_sharding(params, mesh, stacked=True)
 
         def local(p):
+            if sched.randomized:               # ring stand-in (docstring)
+                return (mix_ppermute_ring_flat(p, l_axes)
+                        if gossip_fuse == "flat"
+                        else mix_ppermute_ring(p, l_axes))
             if gossip_fuse == "flat":
-                return mix_ppermute_ring_flat(p, l_axes)
-            return mix_ppermute_ring(p, l_axes)
+                return mix_ppermute_schedule_flat(p, l_axes, step, sched)
+            return mix_ppermute_schedule(p, l_axes, step, sched)
 
         # the flat view concatenates leaves with different model-axis
         # replication into one buffer, which defeats shard_map's static
@@ -122,7 +143,7 @@ def make_dpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh,
                                      spmd_axis_name=l_axes)(
                 state.params, stacked_batch)
         key = jax.random.fold_in(state.rng, state.step)
-        mixed = gossip(state.params, key)              # paper Eq. 2 ordering
+        mixed = gossip(state.params, key, state.step)  # paper Eq. 2 ordering
         if getattr(optimizer, "wants_mixed", False):   # decentlam correction
             updates, opt_state = jax.vmap(optimizer.update)(
                 grads, state.opt_state, state.params, mixed)
@@ -157,6 +178,11 @@ def make_adpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh, *,
     L = n_learners(mesh)
     l_axes = learner_axes(mesh)
     assert gossip_fuse in ("flat", "leaf"), gossip_fuse
+    if (getattr(optimizer, "wants_mixed", False)
+            and getattr(optimizer, "static_mixing_only", False)):
+        raise ValueError("optimizer assumes a static mixing matrix but "
+                         "AD-PSGD gossips over a time-varying pairwise "
+                         "schedule (see optim/decentlam.py)")
 
     def gossip(params, buffer, age, step):
         specs = shd.params_sharding(params, mesh, stacked=True)

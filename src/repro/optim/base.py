@@ -47,6 +47,12 @@ class Optimizer:
     # (lamb's layer-wise trust ratio): the flat engine would silently
     # collapse that to one global leaf, so the trainer refuses/avoids it
     layout_sensitive: bool = False
+    # True when the update is only stable under a STATIC mixing matrix
+    # (decentlam's exact drift correction, drift_scale > 1 - momentum):
+    # pairing it with a time-varying GossipSchedule (random matchings,
+    # one-peer exponential) silently diverges, so the trainer and the pjit
+    # step builders raise instead (see optim/decentlam.py)
+    static_mixing_only: bool = False
 
 
 def apply_updates(params, updates):
@@ -80,4 +86,5 @@ def scale_by_schedule(opt: Optimizer, schedule) -> Optimizer:
             bump=lambda s: {**s, "inner": f.bump(s["inner"]),
                             "step": s["step"] + 1})
     return Optimizer(init, update, wants_mixed=opt.wants_mixed, fused=fused,
-                     layout_sensitive=opt.layout_sensitive)
+                     layout_sensitive=opt.layout_sensitive,
+                     static_mixing_only=opt.static_mixing_only)

@@ -35,7 +35,10 @@ beta=0.9).  For time-varying matchings (topology='random_pair', AD-PSGD)
 pass ``drift_scale=1 - momentum``: the geometric series then sums to exactly
 ONE consensus displacement per injected drift, which is stable under
 switching and still removes most of the naive-momentum bias (see
-tests/test_adpsgd.py).
+tests/test_adpsgd.py).  Since the GossipSchedule engine (DESIGN §12) this
+is enforced: an exact-drift DecentLaM marks itself ``static_mixing_only``
+and the trainer raises when the compiled schedule is time-varying, instead
+of letting the run silently diverge.
 
 Note: the drift term divides by the base lr, so wrap with schedules only if
 the schedule is constant — a time-varying scale would use a different lr in
@@ -50,7 +53,8 @@ from .base import Optimizer
 
 
 def decentlam(lr: float, momentum: float = 0.9, weight_decay: float = 0.0,
-              drift_scale: float = 1.0) -> Optimizer:
+              drift_scale: float = 1.0,
+              unsafe_switching: bool = False) -> Optimizer:
     """Momentum-corrected decentralized SGD (DecentLaM).
 
     The returned optimizer has ``wants_mixed=True``: its update takes a 4th
@@ -59,10 +63,17 @@ def decentlam(lr: float, momentum: float = 0.9, weight_decay: float = 0.0,
 
     ``drift_scale=1.0`` is the paper-exact correction (static topologies);
     use ``1 - momentum`` with time-varying pairwise gossip (random_pair /
-    AD-PSGD) — see the module docstring.
+    AD-PSGD) — see the module docstring.  A drift scale above the stable
+    ``1 - momentum`` threshold marks the optimizer ``static_mixing_only``,
+    and the trainer / pjit step builders REFUSE to pair it with a
+    time-varying GossipSchedule instead of silently diverging (the PR 1
+    failure mode).  ``unsafe_switching=True`` drops that guard — only for
+    deliberately demonstrating the divergence.
     """
     assert lr > 0.0, lr
     assert 0.0 <= drift_scale <= 1.0, drift_scale
+    static_only = (drift_scale > (1.0 - momentum) + 1e-9
+                   and not unsafe_switching)
 
     def init(params):
         return {"mu": jax.tree_util.tree_map(
@@ -86,4 +97,5 @@ def decentlam(lr: float, momentum: float = 0.9, weight_decay: float = 0.0,
             state["mu"], grads, drift)
         return upd, {"mu": mu}
 
-    return Optimizer(init, update, wants_mixed=True)
+    return Optimizer(init, update, wants_mixed=True,
+                     static_mixing_only=static_only)

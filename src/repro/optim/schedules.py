@@ -59,7 +59,8 @@ def scale_by_controller(opt: Optimizer) -> Optimizer:
             scale=lambda s: s["scale"] * f.scale(s["inner"]),
             bump=lambda s: {**s, "inner": f.bump(s["inner"])})
     return Optimizer(init, update, wants_mixed=opt.wants_mixed, fused=fused,
-                     layout_sensitive=opt.layout_sensitive)
+                     layout_sensitive=opt.layout_sensitive,
+                     static_mixing_only=opt.static_mixing_only)
 
 
 def set_controller_scale(opt_state, scale):

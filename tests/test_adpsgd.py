@@ -233,16 +233,55 @@ def test_decentlam_trains_through_adpsgd():
 
 
 def test_decentlam_exact_drift_unstable_on_switching_topology():
-    """Documents WHY drift_scale matters: the paper-exact correction diverges
-    under per-step random matchings (static-W assumption violated)."""
+    """Documents WHY the guard exists: the paper-exact correction diverges
+    under per-step random matchings (static-W assumption violated).  The
+    trainer now refuses this pairing outright, so demonstrating the
+    divergence requires the explicit ``unsafe_switching`` opt-out."""
     cfg = AlgoConfig(algo="dpsgd", topology="random_pair", n_learners=8)
-    _, m_exact, _ = _run(cfg, decentlam(0.05, momentum=0.9), steps=150)
+    _, m_exact, _ = _run(cfg, decentlam(0.05, momentum=0.9,
+                                        unsafe_switching=True), steps=150)
     _, m_damped, _ = _run(cfg, decentlam(0.05, momentum=0.9, drift_scale=0.1),
                           steps=150)
     last_exact = float(m_exact[-1].loss)
     last_damped = float(m_damped[-1].loss)
     assert np.isfinite(last_damped) and last_damped < float(m_damped[0].loss)
     assert (not np.isfinite(last_exact)) or last_exact > 2 * last_damped
+
+
+def test_decentlam_exact_drift_refuses_time_varying_schedules():
+    """The PR 1 divergence is no longer silent: an exact-drift DecentLaM
+    (static_mixing_only) paired with ANY time-varying GossipSchedule —
+    random matchings, multi-round matchings, one-peer exponential, AD-PSGD —
+    raises at trainer construction; static schedules and the damped drift
+    stay accepted, and so does the explicit unsafe override."""
+    exact = decentlam(0.05, momentum=0.9)
+    for cfg in (AlgoConfig(algo="dpsgd", topology="random_pair", n_learners=8),
+                AlgoConfig(algo="dpsgd", topology="random_matching",
+                           n_learners=8, gossip_rounds=2),
+                AlgoConfig(algo="dpsgd", topology="one_peer_exp",
+                           n_learners=8),
+                AlgoConfig(algo="adpsgd", n_learners=8, max_staleness=2)):
+        with pytest.raises(ValueError, match="time-varying"):
+            MultiLearnerTrainer(_quad_loss, exact, cfg)
+    # static schedules absorb the exact drift: accepted
+    for topology in ("ring", "torus", "full", "hierarchical", "exp", "solo"):
+        MultiLearnerTrainer(_quad_loss, exact,
+                            AlgoConfig(algo="dpsgd", topology=topology,
+                                       n_learners=8))
+    # the damped drift is stable under switching: accepted
+    MultiLearnerTrainer(
+        _quad_loss, decentlam(0.05, momentum=0.9, drift_scale=0.1),
+        AlgoConfig(algo="dpsgd", topology="random_pair", n_learners=8))
+    # explicit opt-out for the divergence demonstration above
+    MultiLearnerTrainer(
+        _quad_loss, decentlam(0.05, momentum=0.9, unsafe_switching=True),
+        AlgoConfig(algo="dpsgd", topology="random_pair", n_learners=8))
+    # the guard survives optimizer wrappers (scale_by_schedule)
+    from repro.optim import scale_by_schedule, constant_schedule
+    with pytest.raises(ValueError, match="time-varying"):
+        MultiLearnerTrainer(
+            _quad_loss, scale_by_schedule(exact, constant_schedule(1.0)),
+            AlgoConfig(algo="dpsgd", topology="random_pair", n_learners=8))
 
 
 def test_decentlam_rejects_descend_then_mix():

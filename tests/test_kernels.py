@@ -65,13 +65,15 @@ def test_flash_attention_model_layout_and_grad():
         assert bool(jnp.isfinite(gi).all())
 
 
-@pytest.mark.parametrize("n,T,K", [(4, 256, 1), (5, 336, 1), (8, 512, 2)])
+@pytest.mark.parametrize("n,T,K", [(4, 256, 1), (5, 336, 1), (8, 512, 2),
+                                   (6, 336, 4), (8, 512, 4)])
 @pytest.mark.parametrize("has_mu,wd", [(True, 0.0), (False, 0.0),
                                        (True, 0.01)])
 def test_batched_gossip_kernel_sweep(n, T, K, has_mu, wd):
     """Learner-major batched kernel (scalar-prefetch neighbor gather) vs the
-    jnp oracle: momentum on/off, weight decay, per-learner lr scale, a solo
-    learner and an inactive (straggler) learner."""
+    jnp oracle at arbitrary static K (pairwise, ring, torus-like K=4):
+    momentum on/off, weight decay, per-learner lr scale, a solo learner and
+    an inactive (straggler) learner, non-multiple-of-block T."""
     key = jax.random.PRNGKey(n * T + K)
     ks = jax.random.split(key, 5)
     w = jax.random.normal(ks[0], (n, T, 128))
@@ -85,8 +87,9 @@ def test_batched_gossip_kernel_sweep(n, T, K, has_mu, wd):
         mix = jnp.stack([self_c, 1.0 - self_c], axis=1)
     else:
         idx = jnp.arange(n)
-        partners = jnp.stack([(idx + 1) % n, (idx - 1) % n]).astype(jnp.int32)
-        mix = jnp.full((n, 3), 1.0 / 3.0)
+        partners = jnp.stack([(idx + s) % n
+                              for s in range(1, K + 1)]).astype(jnp.int32)
+        mix = jnp.full((n, K + 1), 1.0 / (K + 1))
     scale = jnp.linspace(0.5, 1.5, n)[:, None]              # per-learner lr
     active = jnp.ones((n,)).at[n - 1].set(0.0)[:, None]     # straggler
     coefs = jnp.concatenate([mix, scale, active], axis=1).astype(jnp.float32)
@@ -154,6 +157,40 @@ def test_batched_kernel_publish_mode(has_mu):
                                   np.asarray(w[0]))
     np.testing.assert_array_equal(np.asarray(outs["pallas"][2][0]),
                                   np.asarray(buf[0]))
+
+
+@pytest.mark.parametrize("name", ["ring", "torus", "full", "hierarchical",
+                                  "exp", "one_peer_exp", "random_pair",
+                                  "random_matching"])
+def test_schedule_tables_drive_kernel_parity(name):
+    """Fused-vs-oracle parity on the EXACT tables every compiled schedule
+    emits (K=1..5 across the set, multi-round cycles, padded self-loop
+    slots), with the straggler mask and a per-learner lr scale folded in —
+    the operands the flat engine really dispatches (DESIGN §12)."""
+    from repro.core.schedule import make_schedule
+    n, T = 8, 336                                     # non-multiple-of-256 T
+    s = make_schedule(name, n, rounds=2)
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    w = jax.random.normal(ks[0], (n, T, 128))
+    g = jax.random.normal(ks[1], (n, T, 128))
+    mu = jax.random.normal(ks[2], (n, T, 128))
+    scale = jnp.linspace(0.5, 1.5, n)[:, None]
+    active = jnp.ones((n,)).at[n - 1].set(0.0)[:, None]     # straggler
+    for step in range(max(2, s.period)):
+        for partners, coefs in s.step_rounds(jax.random.fold_in(ks[3], step),
+                                             step):
+            full = jnp.concatenate(
+                [coefs, scale, active], axis=1).astype(jnp.float32)
+            outs = [flat_gossip_update(w, w, g, mu, partners, full,
+                                       lr=0.1, beta=0.9, backend=b)
+                    for b in ("pallas", "ref")]
+            for a, b in zip(*outs):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           atol=1e-5, err_msg=name)
+            # straggler streams through untouched under every schedule
+            np.testing.assert_array_equal(np.asarray(outs[0][0][n - 1]),
+                                          np.asarray(w[n - 1]))
+            w, mu = outs[0][0], outs[0][1]
 
 
 def test_batched_kernel_solo_learner_keeps_self_mix():

@@ -1,0 +1,269 @@
+"""Property-based conformance suite for the GossipSchedule engine
+(DESIGN §12).
+
+Every schedule claim the rest of the system leans on is pinned here:
+
+  * every realized per-step mixing matrix of every schedule is doubly
+    stochastic, and symmetric exactly where the schedule claims it;
+  * every deterministic partner row is a permutation of range(n) — the
+    contract that lets the launch path turn the same tables into
+    collective-permutes;
+  * consensus distance contracts at >= the spectral-gap rate over a window
+    (the submultiplicative eta-product bound), measured BOTH on the dense
+    matrices and through the fused kernel's mixing-only path;
+  * the one-peer exponential schedule averages to the static exponential
+    matrix over its period;
+  * the multi-round compilations (full-as-rounds, hierarchical) reproduce
+    their dense one-shot matrices exactly;
+  * spectral_gap_profile's measured rate never beats its own bound.
+
+With hypothesis installed (the [test] extra) the sweeps fuzz their input
+space; without it they degrade to a pinned deterministic grid so the
+conformance guarantees stay tier-1 either way.
+"""
+import itertools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core import schedule as gsched
+from repro.core import topology as topo
+
+ALL = gsched.SCHEDULED_TOPOLOGIES
+DET = gsched.DETERMINISTIC_TOPOLOGIES
+
+# pinned fallback grid (hypothesis absent): spans odd/even/prime/power-of-2
+NS = (2, 3, 5, 8, 12, 16)
+SEEDS = (0, 17)
+
+
+def sweep(max_examples=60, **dims):
+    """@given(...) under hypothesis, deterministic grid parametrize without.
+
+    ``dims`` maps argument name -> (hypothesis strategy, fallback values).
+    """
+    names = list(dims)
+    if HAVE_HYPOTHESIS:
+        def deco(fn):
+            return settings(max_examples=max_examples, deadline=None)(
+                given(**{k: v[0] for k, v in dims.items()})(fn))
+        return deco
+    grid = list(itertools.product(*(dims[k][1] for k in names)))
+    if len(names) == 1:
+        grid = [g[0] for g in grid]
+    return pytest.mark.parametrize(",".join(names), grid)
+
+
+def _topos(values=ALL):
+    return (st.sampled_from(values) if HAVE_HYPOTHESIS else None, values)
+
+
+def _ints(lo, hi, fallback):
+    return (st.integers(lo, hi) if HAVE_HYPOTHESIS else None, fallback)
+
+
+def _realize(name, n, seed, step, rounds=2):
+    s = gsched.make_schedule(name, n, rounds=rounds)
+    m = np.asarray(s.step_matrix(jax.random.PRNGKey(seed), step), np.float64)
+    return s, m
+
+
+# ---------------------------------------------------------------------------
+# double stochasticity + symmetry-where-claimed
+# ---------------------------------------------------------------------------
+
+@sweep(name=_topos(), n=_ints(2, 24, NS), seed=_ints(0, 1000, SEEDS),
+       step=_ints(0, 50, (0, 3)))
+def test_every_realized_step_matrix_doubly_stochastic(name, n, seed, step):
+    s, m = _realize(name, n, seed, step)
+    assert topo.is_doubly_stochastic(m), (name, n, step)
+    if s.symmetric:
+        np.testing.assert_allclose(m, m.T, atol=1e-6, err_msg=f"{name} n={n}")
+
+
+@sweep(max_examples=20, n=_ints(2, 24, NS), seed=_ints(0, 500, SEEDS))
+def test_asymmetric_schedules_still_preserve_the_mean(n, seed):
+    """exp / one-peer exp drop symmetry but keep double stochasticity, so
+    the average weight still moves by the average gradient (paper Eq. 3)."""
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed), (n, 7)),
+                   np.float64)
+    for name in ("exp", "one_peer_exp"):
+        _, m = _realize(name, n, seed, step=seed % 5)
+        np.testing.assert_allclose((m @ x).mean(0), x.mean(0), atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# table contract: static K, permutation rows, zero-padded slots
+# ---------------------------------------------------------------------------
+
+@sweep(max_examples=40, name=_topos(DET), n=_ints(2, 24, NS))
+def test_deterministic_partner_rows_are_permutations(name, n):
+    s = gsched.make_schedule(name, n)
+    assert s.perm_rounds
+    assert s.partners.shape == (s.period, s.K, n)
+    assert s.coefs.shape == (s.period, n, s.K + 1)
+    for r in range(s.period):
+        for k in range(s.K):
+            row = np.sort(s.partners[r, k])
+            np.testing.assert_array_equal(row, np.arange(n), err_msg=name)
+    # coefficients are non-negative and each row sums to 1 (row stochastic
+    # by construction; column stochasticity is the matrix test above)
+    assert (s.coefs >= 0).all()
+    np.testing.assert_allclose(s.coefs.sum(-1), 1.0, atol=1e-6)
+
+
+@sweep(max_examples=25, n=_ints(2, 24, NS), seed=_ints(0, 1000, SEEDS))
+def test_random_matching_tables_match_pair_partners(n, seed):
+    """The randomized schedule's round-0 tables are the legacy
+    pair_partners draw, bit for bit — the PR 3 bitwise contracts
+    (AD-PSGD == sync DPSGD at staleness 0) ride on this."""
+    s = gsched.make_schedule("random_pair", n)
+    key = jax.random.PRNGKey(seed)
+    (partners, coefs), = s.step_rounds(key, 0)
+    partner = np.asarray(topo.pair_partners(key, n))
+    np.testing.assert_array_equal(np.asarray(partners[0]), partner)
+    solo = partner == np.arange(n)
+    np.testing.assert_array_equal(np.asarray(coefs[:, 0]),
+                                  np.where(solo, 1.0, 0.5).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# consensus contraction >= the spectral-gap rate over a window
+# ---------------------------------------------------------------------------
+
+def _dis(x):
+    return float(np.linalg.norm(x - x.mean(0, keepdims=True)))
+
+
+@sweep(max_examples=40, name=_topos(), n=_ints(3, 16, (3, 8, 12)),
+       seed=_ints(0, 500, SEEDS))
+def test_consensus_contracts_at_least_at_spectral_gap_rate(name, n, seed):
+    """Over a window, disagreement shrinks by AT LEAST the product of the
+    per-step 1-lambda_2 contraction factors (eta_t = ||M_t - J||_2)."""
+    s = gsched.make_schedule(name, n, rounds=2)
+    key = jax.random.PRNGKey(seed)
+    window = max(6, 2 * s.period)
+    x = np.asarray(jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 9)),
+                   np.float64)
+    d0 = _dis(x)
+    bound = 1.0
+    J = np.full((n, n), 1.0 / n)
+    for t in range(window):
+        kt = jax.random.fold_in(key, t)
+        m = np.asarray(s.step_matrix(kt, t), np.float64)
+        x = m @ x
+        bound *= np.linalg.norm(m - J, 2)
+    assert _dis(x) <= bound * d0 * (1 + 1e-6) + 1e-9, (name, n)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_consensus_contraction_holds_through_the_kernel_path(name):
+    """Same property measured through ops.flat_gossip_mix — the mixing the
+    fused engine actually executes — instead of dense matrices."""
+    from repro.kernels.ops import flat_gossip_mix
+    n, T = 8, 16
+    s = gsched.make_schedule(name, n, rounds=2)
+    key = jax.random.PRNGKey(3)
+    w = jax.random.normal(jax.random.PRNGKey(4), (n, T, 128))
+    d0 = _dis(np.asarray(w, np.float64).reshape(n, -1))
+    window = max(4, 2 * s.period)
+    bound = 1.0
+    J = np.full((n, n), 1.0 / n)
+    for t in range(window):
+        kt = jax.random.fold_in(key, t)
+        for partners, coefs in s.step_rounds(kt, t):
+            w = flat_gossip_mix(w, partners, coefs, backend="ref")
+        m = np.asarray(s.step_matrix(kt, t), np.float64)
+        bound *= np.linalg.norm(m - J, 2)
+    d = _dis(np.asarray(w, np.float64).reshape(n, -1))
+    assert d <= bound * d0 * (1 + 1e-4) + 1e-6, (name, d, bound * d0)
+
+
+@sweep(max_examples=30, name=_topos(), n=_ints(2, 16, (2, 8)))
+def test_profile_measured_rate_never_beats_its_bound(name, n):
+    p = gsched.spectral_gap_profile(gsched.make_schedule(name, n, rounds=2))
+    assert p["measured_rate"] <= p["bound_rate"] + 1e-9, (name, n, p)
+    assert 0.0 <= p["measured_rate"] <= 1.0 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# schedule identities
+# ---------------------------------------------------------------------------
+
+@sweep(max_examples=23, n=_ints(2, 24, NS))
+def test_one_peer_exp_averages_to_static_exp_over_its_period(n):
+    op = gsched.make_schedule("one_peer_exp", n)
+    ex = gsched.make_schedule("exp", n)
+    assert op.period == max(1, int(math.ceil(math.log2(n))))
+    np.testing.assert_allclose(op.mean_matrix(),
+                               np.asarray(ex.step_mats[0], np.float64),
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(ex.step_mats[0], np.float64),
+                               np.asarray(topo.exponential_matrix(n),
+                                          np.float64), atol=1e-7)
+
+
+@sweep(max_examples=23, n=_ints(2, 24, NS))
+def test_full_as_rounds_product_is_exact_full_average(n):
+    s = gsched.make_schedule("full", n)
+    if n & (n - 1) == 0 and n > 1:
+        assert s.K == 1 and s.period == int(math.log2(n))   # hypercube
+    np.testing.assert_allclose(np.asarray(s.step_matrix(None, 0), np.float64),
+                               np.asarray(topo.full_matrix(n), np.float64),
+                               atol=1e-6)
+
+
+@sweep(max_examples=21, n=_ints(4, 24, (4, 8, 9, 12, 16)))
+def test_hierarchical_rounds_product_matches_dense_matrix(n):
+    s = gsched.make_schedule("hierarchical", n)
+    S, g = gsched._hier_dims(n)
+    if 1 < g < n:
+        expect = topo.hierarchical_matrix(S, g)
+        assert s.period == 2        # intra-full then inter-ring
+    elif g == n or S == 1:
+        expect = topo.full_matrix(n)
+    else:
+        expect = topo.ring_matrix(n)
+    np.testing.assert_allclose(np.asarray(s.step_matrix(None, 0), np.float64),
+                               np.asarray(expect, np.float64), atol=1e-6)
+
+
+@sweep(max_examples=30,
+       name=_topos(("ring", "torus", "full", "hierarchical", "exp")),
+       n=_ints(2, 16, (2, 5, 8)))
+def test_static_schedules_match_make_mixing_fn(name, n):
+    """The compiled schedule realizes the same matrix as the legacy dense
+    constructor for every static topology both systems express."""
+    if name == "hierarchical":
+        _, g = gsched._hier_dims(n)
+        if g in (1, n):
+            return      # degenerate factorization delegates (covered above)
+    s = gsched.make_schedule(name, n)
+    m = topo.make_mixing_fn(name, n)(jax.random.PRNGKey(0))
+    np.testing.assert_allclose(np.asarray(s.step_matrix(None, 0), np.float64),
+                               np.asarray(m, np.float64), atol=1e-6)
+
+
+def test_solo_and_unknown():
+    assert gsched.make_schedule("solo", 8) is None
+    assert gsched.make_schedule("ring", 1) is None
+    with pytest.raises(ValueError):
+        gsched.make_schedule("nope", 8)
+
+
+def test_time_varying_classification():
+    assert not gsched.make_schedule("ring", 8).time_varying
+    assert not gsched.make_schedule("full", 8).time_varying     # whole cycle
+    assert not gsched.make_schedule("hierarchical", 8).time_varying
+    assert gsched.make_schedule("one_peer_exp", 8).time_varying
+    assert gsched.make_schedule("random_pair", 8).time_varying
+    assert gsched.make_schedule("random_matching", 8, rounds=3).time_varying

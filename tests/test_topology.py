@@ -44,9 +44,20 @@ def test_hierarchical_matrix_rows():
 
 
 def test_make_mixing_fn_shapes():
-    for name in ["full", "ring", "torus", "random_pair", "solo"]:
+    for name in ["full", "ring", "torus", "random_pair", "solo",
+                 "hierarchical", "exp"]:
         fn = topo.make_mixing_fn(name, 8)
         m = fn(jax.random.PRNGKey(0))
         assert m.shape == (8, 8)
+        assert topo.is_doubly_stochastic(m)
     with pytest.raises(ValueError):
         topo.make_mixing_fn("nope", 8)
+
+
+@pytest.mark.parametrize("n", [2, 3, 4, 8, 13])
+def test_exponential_matrix_doubly_stochastic_circulant(n):
+    m = np.asarray(topo.exponential_matrix(n), np.float64)
+    assert topo.is_doubly_stochastic(m)
+    # circulant: every row is the first row shifted
+    for i in range(n):
+        np.testing.assert_allclose(m[i], np.roll(m[0], i), atol=1e-7)
