@@ -10,28 +10,34 @@ test:
 
 # quick benchmark subset: one dynamics figure, the kernel microbench, the
 # straggler measurement (the async path), the engine regression harness
-# (flat vs pytree, BENCH_PR3.json) and the GossipSchedule topology sweep
-# (smoke mode: every schedule, short training)
+# (flat vs pytree, BENCH_PR3.json), the GossipSchedule topology sweep and
+# the benchmark matrix (smoke mode: trimmed axes, short training,
+# emits BENCH_PR6.json)
 bench-smoke:
 	$(PYTHON) -m benchmarks.fig2_effective_lr
 	$(PYTHON) -m benchmarks.bench_kernels
 	$(PYTHON) -m benchmarks.fig3_straggler
 	$(PYTHON) -m benchmarks.bench_throughput
 	$(PYTHON) -m benchmarks.ablation_topology --smoke
+	$(PYTHON) -m benchmarks.matrix --smoke
 
 # bench-smoke + the CSV output contract (benchmarks/README.md): every
 # benchmark prints `name,us_per_call,derived` and writes a results table
 # capture with a redirect (not a pipe) so a failing benchmark fails the
 # target even without pipefail in the default make shell; clear the tables
-# first — the gate vouches only for THIS run's output, never stale CSVs
+# first — the gate vouches only for THIS run's output, never stale CSVs.
+# check_regression gates BOTH the legacy flat-vs-pytree parity band
+# (BENCH_PR3.json) and the cross-PR per-cell trajectory over every
+# BENCH_PR<N>.json this run emitted; trajectory writes the cross-PR report
 bench-check:
 	rm -rf results/bench
 	$(MAKE) bench-smoke > bench_smoke.out 2>&1; status=$$?; \
 	    cat bench_smoke.out; exit $$status
 	$(PYTHON) -m benchmarks.check_contract bench_smoke.out \
 	    fig2_effective_lr bench_kernel fig3_straggler bench_throughput \
-	    ablation_topology
-	$(PYTHON) -m benchmarks.check_regression results/bench/BENCH_PR3.json
+	    ablation_topology bench_matrix
+	$(PYTHON) -m benchmarks.check_regression "results/bench/BENCH_PR*.json"
+	$(PYTHON) -m benchmarks.trajectory
 
 # the full paper sweep (writes results/bench/*.csv)
 bench:

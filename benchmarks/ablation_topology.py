@@ -37,6 +37,36 @@ TOPOLOGIES = ("full", "ring", "torus", "random_pair", "solo",
 N = 8
 
 
+def run_topology(name: str, *, steps: int = 130, n: int = N) -> dict:
+    """One GossipSchedule cell: train dpsgd on ``name`` + profile the
+    schedule.  Shared by this script's sweep and benchmarks.matrix's
+    ``topology`` workload plugin."""
+    kw = {"gossip_rounds": 2} if name == "random_matching" else {}
+    r = train_fc("dpsgd", LR, n=n, steps=steps, topology=name,
+                 algo_kwargs=kw)
+    tr = r["trainer"]
+    sched = make_schedule(name, n, rounds=kw.get("gossip_rounds", 1))
+    prof = spectral_gap_profile(sched, window=16)
+    consensus = float(np.sqrt(float(
+        learner_var(tr.params_tree(r["state"])))))
+    return {
+        "topology": name,
+        "K": sched.K if sched else 0,
+        "period": sched.period if sched else 0,
+        "rounds_per_step": sched.rounds_per_step if sched else 0,
+        "fused": int(tr._fused is not None),
+        "gap_bound": round(prof["gap_bound"], 6),
+        "measured_gap": round(prof["measured_gap"], 6),
+        "final_loss": final_loss(r["losses"]),
+        "consensus_dist": consensus,
+        "us_per_step": r["us_per_step"],
+    }
+
+
+COLUMNS = ("topology", "K", "period", "rounds_per_step", "fused",
+           "gap_bound", "measured_gap", "final_loss", "consensus_dist")
+
+
 def main(argv=None):
     argv = sys.argv[1:] if argv is None else argv
     smoke = "--smoke" in argv
@@ -44,30 +74,10 @@ def main(argv=None):
     rows = []
     us = 0.0
     for name in TOPOLOGIES:
-        kw = {"gossip_rounds": 2} if name == "random_matching" else {}
-        r = train_fc("dpsgd", LR, n=N, steps=steps, topology=name,
-                     algo_kwargs=kw)
+        r = run_topology(name, steps=steps)
         us += r["us_per_step"]
-        tr = r["trainer"]
-        sched = make_schedule(name, N, rounds=kw.get("gossip_rounds", 1))
-        prof = spectral_gap_profile(sched, window=16)
-        consensus = float(np.sqrt(float(
-            learner_var(tr.params_tree(r["state"])))))
-        rows.append([
-            name,
-            sched.K if sched else 0,
-            sched.period if sched else 0,
-            sched.rounds_per_step if sched else 0,
-            int(tr._fused is not None),
-            round(prof["gap_bound"], 6),
-            round(prof["measured_gap"], 6),
-            final_loss(r["losses"]),
-            consensus,
-        ])
-    write_table("ablation_topology",
-                ["topology", "K", "period", "rounds_per_step", "fused",
-                 "gap_bound", "measured_gap", "final_loss", "consensus_dist"],
-                rows)
+        rows.append([r[c] for c in COLUMNS])
+    write_table("ablation_topology", list(COLUMNS), rows)
     d = {r[0]: r for r in rows}
     # every scheduled topology must have run the fused kernel; the analyzer
     # must never report contraction faster than measured

@@ -14,7 +14,7 @@ from repro.kernels import (flat_gossip_update, gossip_mix_update, ref,
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.ops import dpsgd_fused_update
 
-from .common import write_table
+from .common import parse_smoke, write_table
 
 
 def timeit(fn, *args, reps=3):
@@ -25,12 +25,13 @@ def timeit(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def main():
+def main(argv=None):
+    smoke = parse_smoke(argv)
     key = jax.random.PRNGKey(0)
     ks = jax.random.split(key, 4)
     rows = []
 
-    T, K = 4096, 2
+    T, K = (1024 if smoke else 4096), 2
     w = jax.random.normal(ks[0], (T, 128))
     nb = jax.random.normal(ks[1], (K, T, 128))
     g = jax.random.normal(ks[2], (T, 128))
@@ -78,7 +79,7 @@ def main():
 
     # Lanczos full-reorth sweep (landscape probe inner loop, DESIGN §10):
     # fused dots+axpy streams {V, w} once per pass vs once per basis vector
-    M = 8
+    M = 4 if smoke else 8
     V = jax.random.normal(ks[0], (M, T, 128))
     wv = jax.random.normal(ks[1], (T, 128))
     mask = jnp.ones((M,), jnp.float32)
@@ -88,7 +89,7 @@ def main():
     # traffic model: unfused 2M passes over w + 2 over V vs fused 2 + 2
     rows.append(["reorth", us_ref3, us_int3, (2 * M + 2) / 4])
 
-    S, hd = 512, 64
+    S, hd = (256 if smoke else 512), 64
     q = jax.random.normal(ks[0], (1, 4, S, hd))
     k = jax.random.normal(ks[1], (1, 2, S, hd))
     v = jax.random.normal(ks[2], (1, 2, S, hd))

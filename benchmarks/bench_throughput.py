@@ -15,6 +15,11 @@ CPU parity-noise band on this smoke config, the fused kernel must actually
 dispatch, and the traced step must stay free of parameter-sized
 concatenates.  The derived production collective volume per gossip backend
 (roofline model, App. F) is carried along in the JSON for context.
+
+``measure_cell`` is the single-engine unit benchmarks.matrix reuses as
+its ``throughput`` workload plugin; the emitted BENCH_PR3.json is the v1
+payload the schema's legacy adapter keeps aligned with matrix cells
+(DESIGN §13).  ``--smoke`` shortens the paired run.
 """
 from __future__ import annotations
 
@@ -33,7 +38,8 @@ from repro.launch.analytic import gossip_link_bytes_per_chip
 from repro.models import fcnet
 from repro.optim import sgd
 
-from .common import RESULTS, write_table
+from .common import parse_smoke, write_table
+from .schema import results_dir
 
 # smoke config: the paper's FC net / learner count at CPU scale.
 # CHUNK x CHUNKS steps per engine, interleaved chunkwise (below).
@@ -51,7 +57,52 @@ def _make(algo: str, engine: str) -> MultiLearnerTrainer:
         engine=engine)
 
 
-def _measure(algo: str, params, batches, stacked):
+def _workload_inputs(chunk: int):
+    loader = ShardedLoader(TemplateImages(), n_learners=N,
+                           local_batch=LOCAL_BATCH, seed=0)
+    params = fcnet.init_params(jax.random.PRNGKey(0), in_dim=784, hidden=50)
+    batches = [loader.batch(i) for i in range(chunk)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
+    return params, batches, stacked
+
+
+def measure_cell(algo: str, engine: str, *, chunk: int = CHUNK,
+                 chunks: int = 4):
+    """Single-engine measurement for one matrix cell (benchmarks.matrix).
+
+    Same drivers as the paired harness below — per-step loop for the
+    pytree engine, the ``run_steps`` scan for flat — so matrix cells stay
+    comparable with the legacy BENCH_PR3.json cells the trajectory aligns
+    them against.  Returns (metrics, extra) in the schema-v2 cell shape.
+    """
+    params, batches, stacked = _workload_inputs(chunk)
+    tr = _make(algo, engine)
+    st = tr.init(jax.random.PRNGKey(0), params)
+    flat = tr._flat
+
+    def run_chunk(st):
+        if flat:
+            st, _ = tr.run_steps(st, stacked, k=chunk)
+        else:
+            for b in batches:
+                st, _ = tr.train_step(st, b)
+        return st
+
+    st = run_chunk(st)                                 # compile + warm
+    jax.block_until_ready(st.params)
+    t0 = time.perf_counter()
+    for _ in range(chunks):
+        st = run_chunk(st)
+    jax.block_until_ready(st.params)
+    s = (time.perf_counter() - t0) / (chunk * chunks)
+    metrics = {"us_per_step": s * 1e6,
+               "tokens_per_s": N * LOCAL_BATCH / s}
+    extra = {"source": "bench_throughput",
+             "fused_kernel": tr._fused is not None, "flat_engine": flat}
+    return metrics, extra
+
+
+def _measure(algo: str, params, batches, stacked, chunks=CHUNKS):
     """Finely paired engine timing, robust to machine-load drift.
 
     Both engines train continuously (donated states, real drivers: per-step
@@ -68,7 +119,7 @@ def _measure(algo: str, params, batches, stacked):
         st_tree, _ = tr_tree.train_step(st_tree, b)
     st_flat, _ = tr_flat.run_steps(st_flat, stacked, k=CHUNK)
     t_tree = t_flat = 0.0
-    for _ in range(CHUNKS):
+    for _ in range(chunks):
         t0 = time.perf_counter()
         for b in batches:
             st_tree, _ = tr_tree.train_step(st_tree, b)
@@ -78,21 +129,20 @@ def _measure(algo: str, params, batches, stacked):
         st_flat, _ = tr_flat.run_steps(st_flat, stacked, k=CHUNK)
         jax.block_until_ready(st_flat.params)
         t_flat += time.perf_counter() - t0
-    return tr_flat, t_tree / STEPS, t_flat / STEPS, t_flat / t_tree
+    steps = CHUNK * chunks
+    return tr_flat, t_tree / steps, t_flat / steps, t_flat / t_tree
 
 
-def main():
-    loader = ShardedLoader(TemplateImages(), n_learners=N,
-                           local_batch=LOCAL_BATCH, seed=0)
-    params = fcnet.init_params(jax.random.PRNGKey(0), in_dim=784, hidden=50)
-    batches = [loader.batch(i) for i in range(CHUNK)]
-    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
+def main(argv=None):
+    smoke = parse_smoke(argv)
+    chunks = 4 if smoke else CHUNKS
+    params, batches, stacked = _workload_inputs(CHUNK)
     tokens_per_step = N * LOCAL_BATCH       # 1 sample == 1 token (FC proxy)
 
     rows, report = [], {}
     for algo in ALGOS:
         tr_flat, s_tree, s_flat, ratio = _measure(algo, params, batches,
-                                                  stacked)
+                                                  stacked, chunks)
         # audit: the traced flat step must not concatenate anything
         # parameter-sized (the per-step re-flatten this PR removed)
         st = tr_flat.init(jax.random.PRNGKey(0), params)
@@ -124,13 +174,14 @@ def main():
     }
     payload = {
         "config": {"n_learners": N, "local_batch": LOCAL_BATCH, "lr": LR,
-                   "steps": STEPS, "chunk": CHUNK, "model": "fcnet-784-50-50-10",
+                   "steps": CHUNK * chunks, "chunk": CHUNK,
+                   "model": "fcnet-784-50-50-10",
                    "n_elem": int(tr_flat._meta.n_elem)},
         "algos": report,
         "gossip_volume": volume,
     }
-    os.makedirs(RESULTS, exist_ok=True)
-    with open(os.path.join(RESULTS, "BENCH_PR3.json"), "w") as f:
+    os.makedirs(results_dir(), exist_ok=True)
+    with open(os.path.join(results_dir(), "BENCH_PR3.json"), "w") as f:
         json.dump(payload, f, indent=2)
 
     write_table("bench_throughput",

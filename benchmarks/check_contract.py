@@ -24,7 +24,7 @@ import os
 import re
 import sys
 
-from .common import RESULTS
+from .schema import results_dir
 
 # a contract row: bare name, numeric us_per_call, non-empty derived text
 ROW_RE = re.compile(r"^([a-z0-9_]+),([0-9]+(?:\.[0-9]+)?),(.+)$")
@@ -86,7 +86,7 @@ def main(argv=None) -> int:
     for need in required:
         if not any(name.startswith(need) for name, _, _ in rows):
             errors.append(f"required benchmark `{need}` emitted no row")
-    errors += check_tables(os.path.abspath(RESULTS), required)
+    errors += check_tables(os.path.abspath(results_dir()), required)
 
     for name, us, derived in rows:
         print(f"ok: {name} ({us:.0f} us) {derived[:60]}")

@@ -1,49 +1,57 @@
-"""Perf-regression gate for the flat-state engine (DESIGN §11).
+"""Perf-regression gate over the benchmark matrix (DESIGN §11, §13).
 
-Reads the BENCH_PR3.json emitted by benchmarks.bench_throughput and fails
-(non-zero exit) unless, for every algorithm that ships with the flat
-engine as its default (DPSGD/AD-PSGD):
+Two layers of gating, one CLI:
 
-  * flat-engine us/step stays within the measured CPU parity-noise band of
-    the pytree path (TOLERANCE below — what "no slower" means on a host
-    where the two engines sit at parity and the flat win is HBM traffic on
-    real accelerators), and
-  * the traced flat step's largest concatenate stays far below the
-    parameter count (the per-step re-flatten must not sneak back in), and
-  * the flat path actually dispatched the fused kernel.
+1. **Legacy engine-parity contract** (unchanged from PR 3) — for every v1
+   ``bench_throughput`` payload (``BENCH_PR3.json``-style, an ``algos``
+   table), each algorithm that ships with the flat engine as its default
+   (DPSGD/AD-PSGD) must satisfy:
 
-Timings come from bench_throughput's chunk-interleaved paired runs.  On
-CPU the two engines sit at parity: the flat engine's fused update and scan
-driver pay back the flat<->tree layout bridge (unflatten views forward,
-cotangent scatter backward, ~0.8 ms/step at smoke scale) and repeated
-measurement lands within a ±10% noise band around 1.0 — the decisive flat
-win (one HBM pass over {w, remote, g, mu} instead of many) needs actual
-memory-bandwidth-bound hardware.  TOLERANCE is set to that measured CPU
-noise band: a REAL regression — the old per-call re-flatten was ~3x on the
-e2e microbench, a reintroduced per-step flatten costs ~2 extra full passes
-— blows far past it, while parity jitter does not flake CI.
+   * flat-engine us/step within the measured CPU parity-noise band of the
+     pytree path (TOLERANCE — what "no slower" means on a host where the
+     two engines sit at parity and the flat win is HBM traffic on real
+     accelerators),
+   * the traced flat step's largest concatenate far below the parameter
+     count (the per-step re-flatten must not sneak back in),
+   * the fused kernel actually dispatched.
+
+   On CPU the engines sit at parity: the fused update and scan driver pay
+   back the flat<->tree layout bridge and repeated measurement lands
+   within a ±10% noise band around 1.0.  TOLERANCE is that band: a REAL
+   regression (the old per-call re-flatten was ~3x on the e2e microbench)
+   blows far past it, parity jitter does not flake CI.
+
+2. **Matrix trajectory gate** (PR 6) — when the resolved files span more
+   than one PR, every cell shared between consecutive PRs (aligned by the
+   stable cell key of `benchmarks.schema`; v1 payloads are adapted) must
+   keep its us/step inside the per-cell tolerance band
+   (`benchmarks.trajectory`).
 
 Usage:
-    python -m benchmarks.check_regression [path/to/BENCH_PR3.json]
+    python -m benchmarks.check_regression [path-or-glob ...]
+
+With no arguments the single-file PR 3 behavior is preserved:
+``results/bench/BENCH_PR3.json`` gets the legacy checks.  ``make
+bench-check`` passes ``"results/bench/BENCH_PR*.json"`` so the whole
+matrix of the current run is gated.  Exit codes: 0 ok, 1 regression or
+contract violation, 2 missing/unreadable input.
 """
 from __future__ import annotations
 
+import glob as globlib
 import json
 import os
 import sys
 
-from .common import RESULTS
+from . import trajectory
+from .schema import SchemaError, load_result, results_dir
 
 TOLERANCE = 1.15          # measured CPU parity noise band on the <= gate
 CONCAT_FRACTION = 0.25    # step concats must stay << n_elem (RNG-sized)
 
 
-def main(argv=None) -> int:
-    argv = argv if argv is not None else sys.argv[1:]
-    path = argv[0] if argv else os.path.join(RESULTS, "BENCH_PR3.json")
-    with open(path) as f:
-        payload = json.load(f)
-
+def check_legacy(payload: dict) -> list[str]:
+    """The PR 3 flat-vs-pytree contract on one v1 ``algos`` payload."""
     n_elem = payload["config"]["n_elem"]
     errors = []
     for algo, r in payload["algos"].items():
@@ -71,6 +79,62 @@ def main(argv=None) -> int:
               f"(paired speedup {r['flat_speedup']:.2f}x"
               f"{', gated' if gated else ''}), "
               f"concat {r['flat_step_max_concat_elems']} elems")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    patterns = argv or [os.path.join(results_dir(), "BENCH_PR3.json")]
+
+    paths = []
+    for pat in patterns:
+        matched = sorted(globlib.glob(pat)) if globlib.has_magic(pat) \
+            else [pat]
+        if not matched:
+            print(f"check_regression: no files match {pat!r}",
+                  file=sys.stderr)
+            return 2
+        paths.extend(matched)
+
+    errors = []
+    payloads = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+        except FileNotFoundError:
+            print(f"check_regression: {path} not found — run "
+                  "`python -m benchmarks.bench_throughput` / "
+                  "`python -m benchmarks.matrix --smoke` first",
+                  file=sys.stderr)
+            return 2
+        except json.JSONDecodeError as e:
+            print(f"check_regression: {path} is not JSON: {e}",
+                  file=sys.stderr)
+            return 2
+        if "schema_version" not in raw and "algos" in raw:
+            errors += [f"{os.path.basename(path)}: {e}"
+                       for e in check_legacy(raw)]
+        try:   # schema contract (v1 files go through the legacy adapter)
+            payloads.append(load_result(path))
+        except SchemaError as e:
+            errors.append(str(e))
+
+    prs = sorted({p["pr"] for p in payloads})
+    if len(prs) > 1:
+        rows = trajectory.classify(
+            trajectory.build_trajectory(payloads), prs[-1])
+        shared = [r for r in rows if r["ratio"] is not None]
+        print(f"matrix gate: PRs {prs}, {len(rows)} cells "
+              f"({len(shared)} aligned across PRs)")
+        for r in rows:
+            if r["status"] == "regression":
+                errors.append(
+                    f"cell {r['key']} regressed {r['ratio']:.2f}x us/step "
+                    f"(band {r['tolerance']:.2f}x, PRs {r['prs']})")
+    elif len(paths) > 1:
+        print(f"matrix gate: all files belong to PR {prs} — nothing to "
+              "align, skipping the trajectory gate")
 
     for e in errors:
         print(f"PERF REGRESSION: {e}", file=sys.stderr)

@@ -1,13 +1,17 @@
 """Shared harness for the paper-table benchmarks (CPU scale).
 
 Every benchmark prints CSV rows `name,us_per_call,derived` (run.py contract)
-and writes its full table to results/bench/<name>.csv.
+and writes its full table to results/bench/<name>.csv.  Every workload's
+``main(argv)`` honors ``--smoke`` (parse_smoke): shorter training / trimmed
+sweeps, same tables and summary row — that mode is what `make bench-check`
+and the tests/test_bench_smoke.py sweep exercise.
 """
 from __future__ import annotations
 
 import csv
 import math
 import os
+import sys
 import time
 
 import jax
@@ -19,12 +23,20 @@ from repro.landscape import (AutoLRController, ProbeSchedule,
 from repro.models import fcnet
 from repro.optim import scale_by_controller, set_controller_scale, sgd
 
-RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+from .schema import results_dir
+
+RESULTS = results_dir()   # back-compat alias; prefer results_dir()
+
+
+def parse_smoke(argv) -> bool:
+    """The shared workload CLI: ``--smoke`` means short-but-complete."""
+    argv = sys.argv[1:] if argv is None else list(argv)
+    return "--smoke" in argv
 
 
 def write_table(name: str, header, rows):
-    os.makedirs(RESULTS, exist_ok=True)
-    path = os.path.join(RESULTS, f"{name}.csv")
+    os.makedirs(results_dir(), exist_ok=True)
+    path = os.path.join(results_dir(), f"{name}.csv")
     with open(path, "w", newline="") as f:
         w = csv.writer(f)
         w.writerow(header)
@@ -36,11 +48,14 @@ def train_fc(algo: str, lr: float, *, n: int = 5, local_batch: int = 400,
              steps: int = 150, seed: int = 0, noise_std: float = 0.01,
              topology: str = "random_pair", diag_every: int = 0,
              landscape_every: int = 0, autolr=None, probe_kwargs=None,
-             dataset=None, optimizer=None, algo_kwargs=None):
+             dataset=None, optimizer=None, algo_kwargs=None,
+             engine: str = "auto"):
     """Returns dict(losses, diags, probes, us_per_step, trainer, state, loader).
 
     ``algo_kwargs`` are forwarded to AlgoConfig (adpsgd staleness bound /
-    straggler injection: max_staleness, slow_learner, slow_factor).
+    straggler injection: max_staleness, slow_learner, slow_factor);
+    ``engine`` selects the trainer engine (DESIGN §11) — the matrix
+    harness sweeps it as a first-class axis.
 
     Probes ride the trainer's hook seam (DESIGN §10): ``diag_every`` runs
     the paper diagnostics, ``landscape_every`` the curvature probe; results
@@ -67,7 +82,7 @@ def train_fc(algo: str, lr: float, *, n: int = 5, local_batch: int = 400,
         fcnet.loss_fn, opt,
         AlgoConfig(algo=algo, topology=topology, n_learners=n,
                    noise_std=noise_std, **(algo_kwargs or {})),
-        alpha_for_diag=lr)
+        alpha_for_diag=lr, engine=engine)
 
     diags, probes = [], []
     if diag_every:

@@ -5,17 +5,20 @@ landscape probe's Eq. 4 *prediction* alpha_e ~= alpha(1 - (alpha/2)
 Tr(HC)/sigma_w^2) overlaid against the measured alpha_e (DESIGN §10)."""
 from __future__ import annotations
 
-from .common import final_loss, train_fc, write_table
+from .common import final_loss, parse_smoke, train_fc, write_table
 
 LR = 0.5
 STEPS = 140
 
 
-def main():
+def main(argv=None):
+    smoke = parse_smoke(argv)
+    steps, every = (40, 10) if smoke else (STEPS, 20)
     rows = []
     runs = {}
     for algo in ("ssgd", "dpsgd", "ssgd_star"):
-        r = train_fc(algo, LR, steps=STEPS, diag_every=20, landscape_every=20)
+        r = train_fc(algo, LR, steps=steps, diag_every=every,
+                     landscape_every=every)
         runs[algo] = r
         pred = {step: p for step, p in r["probes"]}
         for step, d in r["diags"]:
@@ -30,10 +33,10 @@ def main():
     # at this 42k-param scale ALL sigmas converge (isotropic escape is
     # dimension-dependent) — honest negative, see EXPERIMENTS.md.
     star = {}
-    for std in (0.1, 0.01, 0.001):
-        rs = train_fc("ssgd_star", LR, steps=STEPS, noise_std=std)
+    for std in (0.1,) if smoke else (0.1, 0.01, 0.001):
+        rs = train_fc("ssgd_star", LR, steps=steps, noise_std=std)
         star[std] = final_loss(rs["losses"])
-        rows.append([f"ssgd_star(std={std})", STEPS, star[std],
+        rows.append([f"ssgd_star(std={std})", steps, star[std],
                      float("nan"), float("nan"), float("nan"), float("nan"),
                      float("nan"), float("nan"), float("nan")])
     write_table("fig2_effective_lr",

@@ -21,28 +21,31 @@ from __future__ import annotations
 
 import time
 
-from .common import final_loss, train_fc, write_table
+from .common import final_loss, parse_smoke, train_fc, write_table
 
 SLOW_FACTORS = (1, 2, 5)
 N, LR, STEPS, TAU = 8, 0.5, 120, 4
 
 
-def main():
+def main(argv=None):
+    smoke = parse_smoke(argv)
+    steps = 24 if smoke else STEPS
+    slow_factors = SLOW_FACTORS[-1:] if smoke else SLOW_FACTORS
     t0 = time.perf_counter()
     rows = []
     derived_bits = {}
     # the sync run does not depend on the straggle factor (only its barrier
     # inflation does) — train it once, reuse across the sweep
-    sync = train_fc("dpsgd", LR, n=N, steps=STEPS)
-    for slow in SLOW_FACTORS:
+    sync = train_fc("dpsgd", LR, n=N, steps=steps)
+    for slow in slow_factors:
         async_kw = dict(max_staleness=TAU, slow_learner=0, slow_factor=slow)
-        adp = train_fc("adpsgd", LR, n=N, steps=STEPS, algo_kwargs=async_kw)
+        adp = train_fc("adpsgd", LR, n=N, steps=steps, algo_kwargs=async_kw)
         for name, run, tick_scale in (("dpsgd_sync", sync, slow),
                                       ("adpsgd", adp, 1)):
             us = run["us_per_step"]
             rows.append([name, slow, us, us * tick_scale,
                          final_loss(run["losses"]), run["staleness_max"]])
-        if slow == SLOW_FACTORS[-1]:
+        if slow == slow_factors[-1]:
             derived_bits = {
                 "sync_ms": sync["us_per_step"] * slow / 1e3,
                 "async_ms": adp["us_per_step"] / 1e3,

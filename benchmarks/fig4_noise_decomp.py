@@ -3,11 +3,12 @@ Delta_S and the landscape-dependent part Delta2; Delta2 >> Delta_S early and
 decays as training smooths the landscape."""
 from __future__ import annotations
 
-from .common import train_fc, write_table
+from .common import parse_smoke, train_fc, write_table
 
 
-def main():
-    r = train_fc("dpsgd", 0.5, steps=120, diag_every=10)
+def main(argv=None):
+    steps = 30 if parse_smoke(argv) else 120
+    r = train_fc("dpsgd", 0.5, steps=steps, diag_every=10)
     rows = [[step, float(d.delta_s), float(d.delta_2),
              float(d.sigma_w_sq), float(d.alpha_e)]
             for step, d in r["diags"]]

@@ -26,7 +26,9 @@ def load(mesh="pod_16x16", algo="dpsgd", backend="einsum", tag=None):
     return out
 
 
-def main():
+def main(argv=None):
+    # --smoke accepted for workload-CLI uniformity: aggregation is already
+    # cheap (no training), so smoke == full here
     recs = load()
     rows = []
     for r in recs:

@@ -1,0 +1,176 @@
+"""Schema for the cross-PR benchmark-matrix artifacts (DESIGN §13).
+
+Every PR's benchmark run emits one ``BENCH_PR<N>.json``.  This module owns
+the record format those files share, so `benchmarks.trajectory` can align
+cells across PRs and `benchmarks.check_regression` can gate on them:
+
+  * ``SCHEMA_VERSION = 2`` payloads are what `benchmarks.matrix` emits:
+    ``{"schema_version": 2, "pr": N, "config": {...}, "cells": {key: cell}}``
+    where each cell is ``{"axes": {...}, "metrics": {...}, "extra": {...},
+    "tolerance": <optional per-cell gate band>}``.
+  * the **cell key** is the stable cross-PR identity: the canonical axes
+    (``AXES`` below, in that order) plus any workload-specific extra axes
+    sorted by name, serialized ``k=v`` and joined with ``/``.  Two PRs that
+    measure the same cell MUST produce the same key — that contract is what
+    makes the trajectory report meaningful (and is pinned by tests).
+  * version-1 payloads (the pre-matrix ``BENCH_PR3.json`` written by
+    `benchmarks.bench_throughput`, no ``schema_version`` field) are adapted
+    on load into v2 cells — one per (algo, engine) — so the trajectory
+    never orphans pre-matrix history.
+
+This module is deliberately free of jax / repro imports: schema validation
+and trajectory math must stay importable (and unit-testable) without
+pulling in the training stack.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+SCHEMA_VERSION = 2
+
+# canonical sweep axes, in cell-key order (ISSUE 6 / ROADMAP item 5)
+AXES = ("workload", "model", "algo", "topology", "n", "precision", "engine")
+
+_PR_RE = re.compile(r"BENCH_PR(\d+)\.json$")
+
+# where benchmark artifacts land; REPRO_BENCH_RESULTS overrides (tests)
+_DEFAULT_RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                                "bench")
+# committed cross-PR history (real BENCH_PR<N>.json snapshots; the legacy
+# BENCH_PR3.json lives here so the backward-compat adapter has a real file)
+HISTORY = os.path.join(os.path.dirname(__file__), "history")
+
+
+def results_dir() -> str:
+    return os.environ.get("REPRO_BENCH_RESULTS") or _DEFAULT_RESULTS
+
+
+class SchemaError(ValueError):
+    """A BENCH_*.json payload that violates the schema contract."""
+
+
+def cell_key(axes: dict) -> str:
+    """Stable cell identity: canonical axes first, extra axes sorted."""
+    missing = [k for k in AXES if k not in axes]
+    if missing:
+        raise SchemaError(f"cell axes missing {missing} (have {sorted(axes)})")
+    extra = sorted(k for k in axes if k not in AXES)
+    return "/".join(f"{k}={axes[k]}" for k in (*AXES, *extra))
+
+
+def make_cell(axes: dict, metrics: dict, extra: dict | None = None,
+              tolerance: float | None = None) -> tuple[str, dict]:
+    """Build one validated (key, cell-record) pair."""
+    cell = {"axes": dict(axes), "metrics": dict(metrics)}
+    if extra:
+        cell["extra"] = dict(extra)
+    if tolerance is not None:
+        cell["tolerance"] = float(tolerance)
+    return cell_key(axes), cell
+
+
+def new_payload(pr: int, config: dict | None = None) -> dict:
+    return {"schema_version": SCHEMA_VERSION, "pr": int(pr),
+            "config": dict(config or {}), "cells": {}}
+
+
+def validate(payload: dict) -> list[str]:
+    """Returns a list of contract violations (empty == valid v2 payload)."""
+    errors = []
+    ver = payload.get("schema_version")
+    if ver != SCHEMA_VERSION:
+        return [f"unknown schema_version {ver!r} (this loader speaks "
+                f"{SCHEMA_VERSION}; v1 files are adapted by load_result)"]
+    if not isinstance(payload.get("pr"), int):
+        errors.append(f"missing/non-int pr field: {payload.get('pr')!r}")
+    cells = payload.get("cells")
+    if not isinstance(cells, dict) or not cells:
+        return errors + ["cells must be a non-empty dict keyed by cell key"]
+    for key, cell in cells.items():
+        axes = cell.get("axes")
+        if not isinstance(axes, dict):
+            errors.append(f"{key}: missing axes dict")
+            continue
+        try:
+            expect = cell_key(axes)
+        except SchemaError as e:
+            errors.append(f"{key}: {e}")
+            continue
+        if expect != key:
+            errors.append(f"cell key {key!r} does not match its axes "
+                          f"(expected {expect!r})")
+        metrics = cell.get("metrics")
+        if not isinstance(metrics, dict) or not metrics:
+            errors.append(f"{key}: missing/empty metrics dict")
+        elif not all(isinstance(v, (int, float)) and not isinstance(v, bool)
+                     for v in metrics.values()):
+            errors.append(f"{key}: non-numeric metric values: {metrics}")
+    return errors
+
+
+def pr_from_filename(path: str) -> int | None:
+    m = _PR_RE.search(os.path.basename(path))
+    return int(m.group(1)) if m else None
+
+
+def _adapt_legacy(payload: dict, path: str) -> dict:
+    """v1 (`bench_throughput`) -> v2: one cell per (algo, engine).
+
+    The axes mirror what `benchmarks.matrix` emits for the same
+    measurement (workload=throughput, model=fcnet, topology=random_pair),
+    so legacy history aligns with matrix cells by key.
+    """
+    cfg = payload.get("config", {})
+    pr = pr_from_filename(path)
+    if pr is None:
+        raise SchemaError(f"{path}: legacy payload needs a BENCH_PR<N>.json "
+                          "filename to recover its PR number")
+    out = new_payload(pr, cfg)
+    out["legacy"] = True
+    algos = payload.get("algos")
+    if not isinstance(algos, dict) or not algos:
+        raise SchemaError(f"{path}: legacy payload has no algos table")
+    for algo, r in algos.items():
+        for engine in ("pytree", "flat"):
+            try:
+                metrics = {
+                    "us_per_step": float(r[f"{engine}_us_per_step"]),
+                    "tokens_per_s": float(r[f"tokens_per_s_{engine}"]),
+                }
+            except KeyError as e:
+                raise SchemaError(
+                    f"{path}: legacy algo {algo!r} missing field {e}")
+            extra = {"source": "bench_throughput"}
+            if engine == "flat":
+                extra.update(
+                    fused_kernel=bool(r.get("fused_kernel")),
+                    flat_step_max_concat_elems=r.get(
+                        "flat_step_max_concat_elems"),
+                    flat_over_pytree_ratio=r.get("flat_over_pytree_ratio"))
+            key, cell = make_cell(
+                {"workload": "throughput", "model": "fcnet", "algo": algo,
+                 "topology": "random_pair",
+                 "n": int(cfg.get("n_learners", 0)), "precision": "f32",
+                 "engine": engine},
+                metrics, extra=extra)
+            out["cells"][key] = cell
+    return out
+
+
+def load_result(path: str) -> dict:
+    """Load + validate one BENCH_*.json, adapting v1 payloads to v2.
+
+    Raises SchemaError on any contract violation (including unknown
+    versions), FileNotFoundError if the file is absent.
+    """
+    with open(path) as f:
+        payload = json.load(f)
+    if "schema_version" not in payload and "algos" in payload:
+        payload = _adapt_legacy(payload, path)
+    errors = validate(payload)
+    if errors:
+        raise SchemaError(f"{path}: " + "; ".join(errors))
+    payload.setdefault("source_path", path)
+    return payload

@@ -2,17 +2,20 @@
 lets it escape early traps, but DPSGD at full linear-scaled lr still wins."""
 from __future__ import annotations
 
-from .common import final_loss, train_fc, write_table
+from .common import final_loss, parse_smoke, train_fc, write_table
 
 LRS = (0.0625, 0.125, 0.25, 0.5)
 
 
-def main():
+def main(argv=None):
+    smoke = parse_smoke(argv)
+    steps = 24 if smoke else 120
+    lrs = (LRS[1], LRS[3]) if smoke else LRS
     rows = []
     us = 0.0
-    for lr in LRS:
+    for lr in lrs:
         for algo in ("ssgd", "dpsgd"):
-            r = train_fc(algo, lr, local_batch=400, steps=120)
+            r = train_fc(algo, lr, local_batch=400, steps=steps)
             us = r["us_per_step"]
             rows.append([algo, lr, final_loss(r["losses"])])
     write_table("table4_lr_tuning", ["algo", "lr", "final_loss"], rows)

@@ -22,7 +22,7 @@ from repro.core.smoothing import estimate_smoothness
 from repro.data import TemplateImages
 from repro.models import fcnet
 
-from .common import write_table
+from .common import parse_smoke, write_table
 
 G = 1.0
 
@@ -31,7 +31,8 @@ def rough_loss(params, batch):
     return G * jnp.sum(jnp.abs(params["w"])) + 0.0 * jnp.sum(batch["x"])
 
 
-def main():
+def main(argv=None):
+    smoke = parse_smoke(argv)
     t0 = time.perf_counter()
     params = {"w": jnp.full((64,), 0.01)}
     batch = {"x": jnp.zeros((1,))}
@@ -41,7 +42,7 @@ def main():
                                        sigma=0.0, n_pairs=6,
                                        probe_radius=0.02))
     rows.append(["l1_analytic", 0.0, ls_raw, float("nan")])
-    for sigma in (0.1, 0.2, 0.4, 0.8):
+    for sigma in (0.1, 0.8) if smoke else (0.1, 0.2, 0.4, 0.8):
         ls = float(estimate_smoothness(rough_loss, params, batch, key,
                                        sigma=sigma, n_pairs=6, n_mc=64,
                                        probe_radius=0.02))
@@ -51,7 +52,7 @@ def main():
     ds = TemplateImages()
     fb = ds.sample(jax.random.PRNGKey(1), 256)
     fp = fcnet.init_params(jax.random.PRNGKey(2), in_dim=784, hidden=50)
-    for sigma in (0.0, 0.2):
+    for sigma in (0.2,) if smoke else (0.0, 0.2):
         ls = float(estimate_smoothness(fcnet.loss_fn, fp, fb,
                                        jax.random.PRNGKey(3), sigma=sigma,
                                        n_pairs=4, n_mc=32,

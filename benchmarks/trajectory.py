@@ -1,0 +1,175 @@
+"""Cross-PR benchmark trajectory: align BENCH_PR<N>.json cells, report
+speedups/regressions (DESIGN §13).
+
+Loads every ``BENCH_PR*.json`` it can find (the current run's results dir
+plus the committed ``benchmarks/history/`` snapshots — a fresh result for
+the same PR number shadows the committed one, keeping same-host timings
+together), aligns cells across PRs by their stable cell key
+(`benchmarks.schema`), and classifies each cell's latest move:
+
+  * ``new``        — cell first appears in the latest PR
+  * ``removed``    — cell existed before but the latest PR dropped it
+  * ``improved``   — us/step fell below IMPROVED_MARK x previous
+  * ``regression`` — us/step rose past the cell's tolerance band
+  * ``ok``         — inside the band
+
+The per-cell tolerance band comes from the cell record itself
+(``tolerance`` field) or DEFAULT_TOLERANCE — deliberately loose for
+wall-clock metrics on shared CI hosts; a real regression (e.g. the ~3x
+per-step re-flatten PR 3 removed) blows far past it, load jitter does not.
+
+CLI:
+    python -m benchmarks.trajectory [glob ...] [--gate] [--tolerance X]
+
+Without ``--gate`` this is a report (exit 0, writes
+``results/bench/trajectory.csv``); with it, any ``regression`` cell exits
+non-zero — that is the mode `benchmarks.check_regression` embeds for
+``make bench-check``.  Like `benchmarks.schema`, this module must stay
+importable without jax.
+"""
+from __future__ import annotations
+
+import csv
+import glob as globlib
+import os
+import sys
+
+from .schema import HISTORY, SchemaError, load_result, results_dir
+
+DEFAULT_TOLERANCE = 2.0   # per-cell us/step band for cross-run CI noise
+IMPROVED_MARK = 0.8       # >=20% faster counts as an improvement
+GATE_METRIC = "us_per_step"
+
+
+def default_globs() -> list[str]:
+    return [os.path.join(results_dir(), "BENCH_PR*.json"),
+            os.path.join(HISTORY, "BENCH_PR*.json")]
+
+
+def load_payloads(patterns=None) -> list[dict]:
+    """Expand globs/paths -> one validated payload per PR, sorted by PR.
+
+    Earlier patterns win on PR-number collisions (results dir shadows the
+    committed history snapshot of the same PR).
+    """
+    patterns = list(patterns) if patterns else default_globs()
+    by_pr: dict[int, dict] = {}
+    for pat in patterns:
+        paths = sorted(globlib.glob(pat)) if globlib.has_magic(pat) else [pat]
+        for path in paths:
+            payload = load_result(path)
+            by_pr.setdefault(payload["pr"], payload)
+    return [by_pr[pr] for pr in sorted(by_pr)]
+
+
+def build_trajectory(payloads) -> dict[str, list[tuple[int, dict]]]:
+    """{cell_key: [(pr, cell), ...]} over PR-ascending payloads."""
+    traj: dict[str, list[tuple[int, dict]]] = {}
+    for p in sorted(payloads, key=lambda p: p["pr"]):
+        for key, cell in p["cells"].items():
+            traj.setdefault(key, []).append((p["pr"], cell))
+    return traj
+
+
+def classify(traj: dict, latest_pr: int,
+             default_tolerance: float = DEFAULT_TOLERANCE) -> list[dict]:
+    """Per-cell trajectory rows, sorted by key.
+
+    ``ratio`` compares the cell's last two appearances on GATE_METRIC
+    (latest / previous; < 1 is a speedup).  Cells that never appeared
+    twice, or lack the gate metric, carry ratio None.
+    """
+    rows = []
+    for key in sorted(traj):
+        series = traj[key]
+        prs = [pr for pr, _ in series]
+        latest_cell = series[-1][1]
+        tol = float(latest_cell.get("tolerance", default_tolerance))
+        ratio = None
+        if prs[-1] != latest_pr:
+            status = "removed"
+        elif len(series) == 1:
+            status = "new"
+        else:
+            prev, cur = series[-2][1], series[-1][1]
+            a = prev["metrics"].get(GATE_METRIC)
+            b = cur["metrics"].get(GATE_METRIC)
+            if a and b:
+                ratio = b / a
+                status = ("regression" if ratio > tol
+                          else "improved" if ratio < IMPROVED_MARK else "ok")
+            else:
+                status = "ok"
+        rows.append({"key": key, "status": status, "ratio": ratio,
+                     "tolerance": tol, "prs": prs,
+                     "metrics": dict(latest_cell["metrics"])})
+    return rows
+
+
+def write_report(rows, path) -> str:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["cell", "status", "us_ratio", "tolerance", "prs",
+                    "us_per_step", "tokens_per_s"])
+        for r in rows:
+            w.writerow([
+                r["key"], r["status"],
+                f"{r['ratio']:.3f}" if r["ratio"] is not None else "",
+                r["tolerance"],
+                ";".join(str(p) for p in r["prs"]),
+                r["metrics"].get("us_per_step", ""),
+                r["metrics"].get("tokens_per_s", ""),
+            ])
+    return path
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    gate = "--gate" in argv
+    tol = DEFAULT_TOLERANCE
+    if "--tolerance" in argv:
+        tol = float(argv[argv.index("--tolerance") + 1])
+    patterns = [a for i, a in enumerate(argv)
+                if not a.startswith("--")
+                and (i == 0 or argv[i - 1] != "--tolerance")]
+    try:
+        payloads = load_payloads(patterns or None)
+    except (SchemaError, FileNotFoundError) as e:
+        print(f"TRAJECTORY ERROR: {e}", file=sys.stderr)
+        return 2
+    if len(payloads) < 2:
+        prs = [p["pr"] for p in payloads]
+        print(f"trajectory: need >= 2 PRs of BENCH_*.json to align "
+              f"(found {prs}); run `python -m benchmarks.matrix --smoke` "
+              "and/or `python -m benchmarks.bench_throughput` first",
+              file=sys.stderr)
+        return 2
+
+    rows = classify(build_trajectory(payloads), payloads[-1]["pr"],
+                    default_tolerance=tol)
+    prs = [p["pr"] for p in payloads]
+    print(f"benchmark trajectory over PRs {prs} "
+          f"({len(rows)} cells, tolerance {tol:.2f}x):")
+    for r in rows:
+        move = (f"{r['ratio']:.2f}x us/step" if r["ratio"] is not None
+                else f"PRs {r['prs']}")
+        print(f"  [{r['status']:>10}] {r['key']}  {move}")
+    counts = {}
+    for r in rows:
+        counts[r["status"]] = counts.get(r["status"], 0) + 1
+    path = write_report(rows, os.path.join(results_dir(), "trajectory.csv"))
+    print("trajectory summary: "
+          + " ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+          + f" -> {os.path.relpath(path)}")
+
+    bad = [r for r in rows if r["status"] == "regression"]
+    for r in bad:
+        print(f"TRAJECTORY REGRESSION: {r['key']} {r['ratio']:.2f}x "
+              f"us/step (band {r['tolerance']:.2f}x, PRs {r['prs']})",
+              file=sys.stderr)
+    return 1 if (gate and bad) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,350 @@
+"""Unit tests for the benchmark-matrix harness (ISSUE 6 / DESIGN §13):
+spec expansion, the schema-versioned BENCH_PR<N>.json record, the legacy
+BENCH_PR3.json adapter, the cross-PR trajectory classifier, and the
+check_regression CLI's failure exit codes.
+
+Everything here runs on synthetic payloads — no jax, no training; the
+schema/trajectory/check_regression modules are deliberately importable
+without the training stack and these tests keep them that way.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks import check_regression, schema, trajectory
+from benchmarks.matrix import SPEC, MatrixSpec, REGISTRY, expand
+
+HISTORY_PR3 = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "history", "BENCH_PR3.json")
+
+
+# -- helpers ------------------------------------------------------------------
+
+def axes(**over):
+    base = {"workload": "throughput", "model": "fcnet", "algo": "dpsgd",
+            "topology": "random_pair", "n": 5, "precision": "f32",
+            "engine": "flat"}
+    base.update(over)
+    return base
+
+
+def payload(pr, cells):
+    p = schema.new_payload(pr)
+    for ax, metrics in cells:
+        key, cell = schema.make_cell(ax, metrics)
+        p["cells"][key] = cell
+    return p
+
+
+# -- spec expansion -----------------------------------------------------------
+
+TINY = MatrixSpec(
+    base={"model": ("fcnet",), "precision": ("f32",), "n": (5,)},
+    workloads={"wl": {"algo": ("a", "b"), "engine": ("flat", "pytree"),
+                      "topology": ("ring",)}},
+    exclude=({"algo": "b", "engine": "flat"},),
+    smoke={"wl": {"algo": ("a",)}},
+)
+
+
+def test_expand_cartesian_product_minus_excludes():
+    cells = expand(TINY)
+    assert len(cells) == 3   # 2 algos x 2 engines - 1 excluded
+    assert {(c["algo"], c["engine"]) for c in cells} == {
+        ("a", "flat"), ("a", "pytree"), ("b", "pytree")}
+    assert all(c["workload"] == "wl" and c["n"] == 5 for c in cells)
+
+
+def test_expand_deterministic_order():
+    assert expand(TINY) == expand(TINY)
+    assert [tuple(c.items()) for c in expand(TINY)] == \
+        [tuple(c.items()) for c in expand(TINY)]
+
+
+def test_expand_smoke_subsets_values_keeps_keys():
+    smoke = expand(TINY, smoke=True)
+    assert {(c["algo"], c["engine"]) for c in smoke} == {
+        ("a", "flat"), ("a", "pytree")}
+    full_keys = {schema.cell_key(c) for c in expand(TINY)}
+    assert {schema.cell_key(c) for c in smoke} <= full_keys
+
+
+def test_default_spec_covers_registry_and_excludes_ssgd_star_flat():
+    cells = expand(SPEC)
+    assert {c["workload"] for c in cells} == set(REGISTRY)
+    assert not any(c["algo"] == "ssgd_star" and c["engine"] == "flat"
+                   for c in cells)
+    assert any(c["algo"] == "ssgd_star" for c in cells)
+    # smoke trims values, never introduces new cells
+    assert {schema.cell_key(c) for c in expand(SPEC, smoke=True)} <= \
+        {schema.cell_key(c) for c in cells}
+
+
+# -- cell keys ----------------------------------------------------------------
+
+def test_cell_key_stability_pin():
+    # the cross-PR contract: this exact string is what aligns trajectories
+    assert schema.cell_key(axes()) == (
+        "workload=throughput/model=fcnet/algo=dpsgd/topology=random_pair/"
+        "n=5/precision=f32/engine=flat")
+
+
+def test_cell_key_order_independent_and_extra_axes_sorted():
+    a = axes()
+    shuffled = dict(reversed(list(a.items())))
+    assert schema.cell_key(a) == schema.cell_key(shuffled)
+    with_extra = axes(zeta=1, batch_scale=4)
+    assert schema.cell_key(with_extra).endswith(
+        "engine=flat/batch_scale=4/zeta=1")
+
+
+def test_cell_key_missing_axis_raises():
+    a = axes()
+    del a["precision"]
+    with pytest.raises(schema.SchemaError, match="precision"):
+        schema.cell_key(a)
+
+
+# -- schema validation --------------------------------------------------------
+
+def test_validate_good_payload():
+    p = payload(6, [(axes(), {"us_per_step": 10.0})])
+    assert schema.validate(p) == []
+
+
+def test_validate_rejects_unknown_version():
+    p = payload(6, [(axes(), {"us_per_step": 10.0})])
+    p["schema_version"] = 99
+    errs = schema.validate(p)
+    assert len(errs) == 1 and "unknown schema_version" in errs[0]
+
+
+def test_validate_rejects_missing_fields():
+    p = payload(6, [(axes(), {"us_per_step": 10.0})])
+    key = next(iter(p["cells"]))
+    del p["cells"][key]["metrics"]
+    assert any("metrics" in e for e in schema.validate(p))
+
+    p2 = payload(6, [(axes(), {"us_per_step": 10.0})])
+    del p2["pr"]
+    assert any("pr" in e for e in schema.validate(p2))
+
+    p3 = payload(6, [(axes(), {"us_per_step": 10.0})])
+    p3["cells"] = {}
+    assert any("cells" in e for e in schema.validate(p3))
+
+
+def test_validate_rejects_key_axes_mismatch_and_bad_metrics(tmp_path):
+    p = payload(6, [(axes(), {"us_per_step": 10.0})])
+    key = next(iter(p["cells"]))
+    p["cells"]["bogus/key"] = p["cells"].pop(key)
+    assert any("does not match its axes" in e for e in schema.validate(p))
+
+    p2 = payload(6, [(axes(), {"us_per_step": "fast"})])
+    assert any("non-numeric" in e for e in schema.validate(p2))
+
+    path = tmp_path / "BENCH_PR9.json"
+    path.write_text(json.dumps(p))
+    with pytest.raises(schema.SchemaError):
+        schema.load_result(str(path))
+
+
+# -- legacy adapter (backward compat with the pre-matrix BENCH_PR3.json) ------
+
+LEGACY = {
+    "config": {"n_learners": 5, "local_batch": 400, "n_elem": 42_310},
+    "algos": {
+        "dpsgd": {"pytree_us_per_step": 100.0, "flat_us_per_step": 95.0,
+                  "flat_speedup": 1.05, "flat_over_pytree_ratio": 0.95,
+                  "tokens_per_s_pytree": 2e4, "tokens_per_s_flat": 2.1e4,
+                  "flat_step_max_concat_elems": 12,
+                  "fused_kernel": True, "default_engine_flat": True},
+    },
+}
+
+
+def test_legacy_adapter_synthetic(tmp_path):
+    path = tmp_path / "BENCH_PR3.json"
+    path.write_text(json.dumps(LEGACY))
+    p = schema.load_result(str(path))
+    assert p["pr"] == 3 and p["legacy"] is True
+    assert schema.validate(p) == []
+    key = schema.cell_key(axes())
+    assert p["cells"][key]["metrics"] == {"us_per_step": 95.0,
+                                          "tokens_per_s": 2.1e4}
+    assert p["cells"][key]["extra"]["fused_kernel"] is True
+    tree_key = schema.cell_key(axes(engine="pytree"))
+    assert p["cells"][tree_key]["metrics"]["us_per_step"] == 100.0
+
+
+def test_legacy_adapter_needs_pr_number_in_filename(tmp_path):
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(LEGACY))
+    with pytest.raises(schema.SchemaError, match="PR number"):
+        schema.load_result(str(path))
+
+
+def test_committed_bench_pr3_parses_under_new_loader():
+    """The real pre-matrix artifact must never be orphaned by the schema."""
+    p = schema.load_result(HISTORY_PR3)
+    assert p["pr"] == 3 and p.get("legacy")
+    assert schema.validate(p) == []
+    # one flat + one pytree cell per measured algorithm
+    engines = {}
+    for cell in p["cells"].values():
+        engines.setdefault(cell["axes"]["algo"], set()).add(
+            cell["axes"]["engine"])
+    assert engines.keys() >= {"ssgd", "dpsgd", "adpsgd"}
+    assert all(v == {"flat", "pytree"} for v in engines.values())
+    assert all(c["metrics"]["us_per_step"] > 0 for c in p["cells"].values())
+
+
+# -- trajectory ---------------------------------------------------------------
+
+def test_trajectory_improvement_ok_and_new_removed_cells():
+    p3 = payload(3, [(axes(), {"us_per_step": 100.0}),
+                     (axes(algo="ssgd"), {"us_per_step": 50.0}),
+                     (axes(algo="adpsgd"), {"us_per_step": 80.0})])
+    p6 = payload(6, [(axes(), {"us_per_step": 60.0}),          # improved
+                     (axes(algo="ssgd"), {"us_per_step": 55.0}),  # ok
+                     (axes(algo="gone"), {"us_per_step": 9.0})])  # new
+    rows = {r["key"]: r for r in trajectory.classify(
+        trajectory.build_trajectory([p3, p6]), 6)}
+    assert rows[schema.cell_key(axes())]["status"] == "improved"
+    assert rows[schema.cell_key(axes())]["ratio"] == pytest.approx(0.6)
+    assert rows[schema.cell_key(axes(algo="ssgd"))]["status"] == "ok"
+    assert rows[schema.cell_key(axes(algo="gone"))]["status"] == "new"
+    assert rows[schema.cell_key(axes(algo="adpsgd"))]["status"] == "removed"
+
+
+def test_trajectory_regression_past_tolerance_gates():
+    p3 = payload(3, [(axes(), {"us_per_step": 100.0})])
+    p6 = payload(6, [(axes(), {"us_per_step": 100.0 * 2.5})])
+    rows = trajectory.classify(trajectory.build_trajectory([p3, p6]), 6)
+    assert rows[0]["status"] == "regression"
+    # inside the default band -> ok
+    p6b = payload(6, [(axes(), {"us_per_step": 150.0})])
+    rows = trajectory.classify(trajectory.build_trajectory([p3, p6b]), 6)
+    assert rows[0]["status"] == "ok"
+
+
+def test_trajectory_per_cell_tolerance_override():
+    p3 = payload(3, [(axes(), {"us_per_step": 100.0})])
+    p6 = payload(6, [(axes(), {"us_per_step": 130.0})])
+    key = next(iter(p6["cells"]))
+    p6["cells"][key]["tolerance"] = 1.2   # tighter than the default band
+    rows = trajectory.classify(trajectory.build_trajectory([p3, p6]), 6)
+    assert rows[0]["status"] == "regression"
+    assert rows[0]["tolerance"] == 1.2
+
+
+def test_trajectory_uses_last_two_appearances():
+    p3 = payload(3, [(axes(), {"us_per_step": 1000.0})])
+    p5 = payload(5, [(axes(), {"us_per_step": 100.0})])
+    p6 = payload(6, [(axes(), {"us_per_step": 101.0})])
+    rows = trajectory.classify(
+        trajectory.build_trajectory([p3, p5, p6]), 6)
+    assert rows[0]["status"] == "ok"
+    assert rows[0]["prs"] == [3, 5, 6]
+
+
+def test_trajectory_cli_report_and_gate(tmp_path, monkeypatch, capsys):
+    monkeypatch.setenv("REPRO_BENCH_RESULTS", str(tmp_path))
+    p3 = payload(3, [(axes(), {"us_per_step": 100.0})])
+    p6 = payload(6, [(axes(), {"us_per_step": 300.0}),
+                     (axes(algo="ssgd"), {"us_per_step": 10.0})])
+    for p in (p3, p6):
+        (tmp_path / f"BENCH_PR{p['pr']}.json").write_text(json.dumps(p))
+    glob = str(tmp_path / "BENCH_PR*.json")
+    assert trajectory.main([glob]) == 0            # report never gates
+    assert (tmp_path / "trajectory.csv").exists()
+    assert trajectory.main([glob, "--gate"]) == 1  # 3x past the band
+    assert trajectory.main([glob, "--gate", "--tolerance", "4.0"]) == 0
+    out = capsys.readouterr()
+    assert "regression" in out.out + out.err
+
+
+def test_trajectory_cli_needs_two_prs(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_RESULTS", str(tmp_path))
+    p6 = payload(6, [(axes(), {"us_per_step": 10.0})])
+    (tmp_path / "BENCH_PR6.json").write_text(json.dumps(p6))
+    assert trajectory.main([str(tmp_path / "BENCH_PR*.json")]) == 2
+
+
+def test_trajectory_results_shadow_history_on_same_pr(tmp_path):
+    hist = tmp_path / "hist"
+    res = tmp_path / "res"
+    hist.mkdir(), res.mkdir()
+    stale = payload(3, [(axes(), {"us_per_step": 999.0})])
+    fresh = payload(3, [(axes(), {"us_per_step": 100.0})])
+    (hist / "BENCH_PR3.json").write_text(json.dumps(stale))
+    (res / "BENCH_PR3.json").write_text(json.dumps(fresh))
+    loaded = trajectory.load_payloads([str(res / "BENCH_PR*.json"),
+                                       str(hist / "BENCH_PR*.json")])
+    assert len(loaded) == 1
+    assert next(iter(loaded[0]["cells"].values()))[
+        "metrics"]["us_per_step"] == 100.0
+
+
+# -- check_regression CLI: files, globs, exit codes ---------------------------
+
+def _write_legacy(tmp_path, ratio=0.95, fused=True, concat=12, pr=3):
+    data = json.loads(json.dumps(LEGACY))
+    a = data["algos"]["dpsgd"]
+    a["flat_over_pytree_ratio"] = ratio
+    a["flat_us_per_step"] = 100.0 * ratio
+    a["flat_speedup"] = 1.0 / ratio
+    a["fused_kernel"] = fused
+    a["flat_step_max_concat_elems"] = concat
+    path = tmp_path / f"BENCH_PR{pr}.json"
+    path.write_text(json.dumps(data))
+    return path
+
+
+def test_check_regression_ok_and_explicit_path(tmp_path):
+    path = _write_legacy(tmp_path)
+    assert check_regression.main([str(path)]) == 0
+
+
+def test_check_regression_default_path_missing_exits_2(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_RESULTS", str(tmp_path / "empty"))
+    assert check_regression.main() == 2
+    assert check_regression.main([str(tmp_path / "nope.json")]) == 2
+
+
+def test_check_regression_unmatched_glob_exits_2(tmp_path):
+    assert check_regression.main([str(tmp_path / "BENCH_PR*.json")]) == 2
+
+
+def test_check_regression_bad_json_exits_2(tmp_path):
+    path = tmp_path / "BENCH_PR3.json"
+    path.write_text("{not json")
+    assert check_regression.main([str(path)]) == 2
+
+
+def test_check_regression_legacy_violations_exit_1(tmp_path, capsys):
+    slow = _write_legacy(tmp_path, ratio=1.5)
+    assert check_regression.main([str(slow)]) == 1
+    assert "SLOWER" in capsys.readouterr().err
+
+    unfused = _write_legacy(tmp_path, fused=False)
+    assert check_regression.main([str(unfused)]) == 1
+    assert "fused" in capsys.readouterr().err
+
+    refatten = _write_legacy(tmp_path, concat=42_310)
+    assert check_regression.main([str(refatten)]) == 1
+    assert "concatenate" in capsys.readouterr().err
+
+
+def test_check_regression_matrix_gate_over_glob(tmp_path):
+    _write_legacy(tmp_path, pr=3)   # flat dpsgd at 95 us/step
+    p6 = payload(6, [(axes(), {"us_per_step": 95.0 * 3})])
+    (tmp_path / "BENCH_PR6.json").write_text(json.dumps(p6))
+    # cross-PR cell regressed 3x -> gate fails on the glob...
+    assert check_regression.main([str(tmp_path / "BENCH_PR*.json")]) == 1
+    # ...but each file alone still passes its own static contract
+    assert check_regression.main([str(tmp_path / "BENCH_PR6.json")]) == 0
+    p6_ok = payload(6, [(axes(), {"us_per_step": 96.0})])
+    (tmp_path / "BENCH_PR6.json").write_text(json.dumps(p6_ok))
+    assert check_regression.main([str(tmp_path / "BENCH_PR*.json")]) == 0

@@ -1,0 +1,92 @@
+"""Every benchmarks/*.py workload must expose and survive its ``--smoke``
+entrypoint (ISSUE 6): the smoke sweep is what `make bench-check` and CI
+gate on, so a workload whose CLI rots breaks the bench matrix silently.
+
+Results are redirected to a tmp dir via REPRO_BENCH_RESULTS so the sweep
+never clobbers a real ``results/bench`` run.  Guards follow the existing
+importorskip pattern (tests/test_properties.py): a trimmed environment
+skips instead of erroring.
+"""
+import glob
+import importlib
+import os
+
+import pytest
+
+pytest.importorskip("jax", reason="benchmark workloads train through jax")
+
+BENCH_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks")
+
+# every module under benchmarks/ that is a runnable workload (has a
+# --smoke CLI and prints a `name,us_per_call,derived` row or, for matrix,
+# emits the BENCH_PR<N>.json artifact)
+WORKLOADS = (
+    "fig2_effective_lr",
+    "fig3_straggler",
+    "fig4_noise_decomp",
+    "table1_large_batch",
+    "table4_lr_tuning",
+    "table5_asr_proxy",
+    "theorem1_smoothing",
+    "ablation_topology",
+    "bench_kernels",
+    "bench_throughput",
+    "roofline_report",
+    "matrix",
+)
+# gates/libraries, not workloads: no training entrypoint of their own
+NON_WORKLOADS = {"run", "common", "schema", "trajectory",
+                 "check_contract", "check_regression", "__init__"}
+
+
+def test_workload_list_is_complete():
+    """A new benchmarks/*.py must either join WORKLOADS (and support
+    --smoke) or be declared a non-workload here — no silent third state."""
+    modules = {os.path.basename(p)[:-3]
+               for p in glob.glob(os.path.join(BENCH_DIR, "*.py"))}
+    assert modules == set(WORKLOADS) | (modules & NON_WORKLOADS), (
+        "unclassified benchmarks module(s): "
+        f"{modules - set(WORKLOADS) - NON_WORKLOADS}")
+
+
+@pytest.fixture()
+def bench_tmp_results(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_BENCH_RESULTS", str(tmp_path))
+    return tmp_path
+
+
+# `matrix` is exercised (and its artifact schema-checked) by the dedicated
+# test below — running its full cell sweep twice would double CI cost
+@pytest.mark.parametrize("name", [w for w in WORKLOADS if w != "matrix"])
+def test_workload_survives_smoke(name, bench_tmp_results, capsys):
+    mod = importlib.import_module(f"benchmarks.{name}")
+    rc = mod.main(["--smoke"])
+    # mains return either an exit code (matrix-style) or a result payload
+    # (fig2 returns its losses dict); only int exit codes can fail
+    assert not (isinstance(rc, int) and rc), f"{name} --smoke exited {rc}"
+    out = capsys.readouterr().out
+    # bench_kernels prints per-kernel rows: bench_kernel_<name>
+    stem = {"bench_kernels": "bench_kernel"}.get(name, name)
+    assert any(line.startswith(stem) for line in out.splitlines()), (
+        f"{name} --smoke printed no `{stem},us,derived` contract row:\n"
+        f"{out}")
+
+
+def test_matrix_smoke_artifact_is_schema_valid(bench_tmp_results, capsys):
+    from benchmarks import matrix, schema
+    assert matrix.main(["--smoke", "--pr", "6"]) == 0
+    out = capsys.readouterr().out
+    assert any(line.startswith("bench_matrix,")
+               for line in out.splitlines()), out
+    path = bench_tmp_results / "BENCH_PR6.json"
+    payload = schema.load_result(str(path))
+    assert payload["pr"] == 6 and not payload.get("legacy")
+    expected = {schema.cell_key(c)
+                for c in matrix.expand(matrix.SPEC, smoke=True)}
+    assert set(payload["cells"]) == expected
+    # matrix throughput cells must align with the committed legacy history
+    hist = schema.load_result(os.path.join(
+        BENCH_DIR, "history", "BENCH_PR3.json"))
+    shared = set(payload["cells"]) & set(hist["cells"])
+    assert len(shared) >= 6, (sorted(payload["cells"]), sorted(hist["cells"]))
