@@ -13,6 +13,9 @@ registry maps each cell onto one of the existing runners:
     sweep: contraction bound + loss per schedule)
   * ``large_batch`` -> `table1_large_batch.run_cell` (AdaScale-style
     batch/LR scaling axis — the paper's Table 1 regime)
+  * ``serving``     -> `serving.measure_cell` (continuous vs static
+    batching under open-loop Poisson arrivals: tokens/s + p50/p99 latency
+    on the paged decode path, ISSUE 7)
 
 Each PR's run emits ``results/bench/BENCH_PR<N>.json`` in the
 schema-versioned format of `benchmarks.schema`; `benchmarks.trajectory`
@@ -36,7 +39,7 @@ import time
 
 from . import schema
 
-CURRENT_PR = 6   # bump per PR: the emitted artifact is BENCH_PR<N>.json
+CURRENT_PR = 7   # bump per PR: the emitted artifact is BENCH_PR<N>.json
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +77,16 @@ SPEC = MatrixSpec(
             "engine": ("auto",),
             "topology": ("random_pair",),
             "batch_scale": (1, 2, 4),
+        },
+        # serving sweeps the ADMISSION engine, not the trainer engine; the
+        # greedy/solo axes are degenerate but keep the cell key canonical
+        "serving": {
+            "model": ("tiny-lm",),
+            "algo": ("greedy",),
+            "topology": ("solo",),
+            "n": (4,),                      # decode slots
+            "engine": ("continuous", "static"),
+            "rate": (0.25, 1.0),            # requests per engine step
         },
     },
     # ssgd_star draws per-leaf weight noise — the flat engine refuses it
@@ -148,6 +161,15 @@ def _run_large_batch(axes: dict, smoke: bool):
     metrics = {k: float(r[k]) for k in
                ("us_per_step", "final_loss", "autolr_scale")}
     return metrics, {"nB": r["nB"], "lr": r["lr"]}
+
+
+@workload("serving")
+def _run_serving(axes: dict, smoke: bool):
+    from .serving import MAX_LEN, PAGE_SIZE, measure_cell
+    m = measure_cell(axes["engine"], axes["rate"], smoke=smoke)
+    extra = {"page_size": PAGE_SIZE, "max_len": MAX_LEN,
+             "n_requests": int(m.pop("n_requests"))}
+    return m, extra
 
 
 # -- execution ----------------------------------------------------------------

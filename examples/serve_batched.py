@@ -1,6 +1,13 @@
-"""Batched serving example: greedy decoding with the rotating-KV-cache
-decode path (the same serve_step the dry-run lowers for decode_32k /
-long_500k, here on the reduced config at CPU scale).
+"""Batched serving example — now a thin CLI over the serve engine
+(repro.serve.ServeEngine): continuous batching with the paged KV cache
+instead of a hand-rolled loop on the rotating decode path.
+
+Mixed-length prompts are submitted up front; the engine prefills them
+token-at-a-time inside the same fused decode step (no separate prefill
+trace), recycles slots as requests finish, and every generated token is
+counted — including the first, which the old example dropped.  Timing
+starts after ``warmup()`` (compile excluded) and each step host-syncs on
+the logits, so the tok/s figure is honest wall-clock.
 
     PYTHONPATH=src python examples/serve_batched.py --arch gemma2-27b
 """
@@ -8,47 +15,56 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import build_model
+from repro.serve import ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="transformer-100m")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4, help="decode slots")
     ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--buf", type=int, default=64)
+    ap.add_argument("--buf", type=int, default=64,
+                    help="max tokens per request (prompt + generated)")
+    ap.add_argument("--page", type=int, default=8, help="KV page size")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="requests to serve (default: 2x slots)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).smoke_config()
     api = build_model(cfg)
-    key = jax.random.PRNGKey(0)
-    params = api.init(key)
-    if cfg.family == "audio":
-        frames = jax.random.normal(key, (args.batch, 16, cfg.d_model)) * 0.1
-        cache = api.init_cache(params, frames, args.buf)
-    else:
-        cache = api.init_cache(params, args.batch, args.buf)
+    if not api.has_paged:
+        raise SystemExit(f"{cfg.name}: family {cfg.family} has no paged "
+                         "decode path (text families only)")
+    params = api.init(jax.random.PRNGKey(0))
 
-    decode = jax.jit(api.decode_step)
-    tokens = jnp.zeros((args.batch, 1), jnp.int32)
-    generated = [tokens]
-    logits, cache = decode(params, cache, tokens, jnp.int32(0))  # compile
-    t0 = time.time()
-    for pos in range(1, args.new_tokens):
-        tokens = jnp.argmax(logits[..., :cfg.vocab], axis=-1).astype(jnp.int32)
-        generated.append(tokens)
-        logits, cache = decode(params, cache, tokens, jnp.int32(pos))
-    dt = (time.time() - t0) / (args.new_tokens - 1)
-    out = jnp.concatenate(generated, axis=1)
-    print(f"arch={cfg.name} batch={args.batch} buf={args.buf}")
-    print(f"{dt * 1e3:.1f} ms/token/batch  "
-          f"({args.batch / dt:.1f} tok/s aggregate)")
+    eng = ServeEngine(api, params, n_slots=args.batch, page_size=args.page,
+                      max_len=args.buf)
+    rng = np.random.default_rng(0)
+    n_req = args.requests or 2 * args.batch
+    max_prompt = max(1, args.buf - args.new_tokens)
+    reqs = [eng.submit(rng.integers(1, cfg.vocab,
+                                    rng.integers(1, max_prompt + 1)).tolist(),
+                       args.new_tokens)
+            for _ in range(n_req)]
+
+    eng.warmup()                      # compile outside the timed region
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+
+    total = eng.generated_total
+    print(f"arch={cfg.name} slots={args.batch} page={args.page} "
+          f"buf={args.buf} requests={n_req}")
+    print(f"{dt * 1e3 / eng.real_steps:.1f} ms/step  "
+          f"({total / dt:.1f} tok/s aggregate, {total} tokens, "
+          f"{eng.real_steps} steps)")
     print("sequences:")
-    for row in out[:4]:
-        print("  ", row.tolist()[:16], "...")
+    for r in reqs[:4]:
+        print("  ", r.generated[:16], "...")
 
 
 if __name__ == "__main__":

@@ -15,6 +15,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .decode_attention import paged_decode_attention_fwd
 from .flash_attention import flash_attention_fwd
 from .gossip_mix import (flatten_for_kernel, gossip_mix_update,
                          gossip_mix_update_flat)
@@ -71,6 +72,30 @@ def flash_attention(q, k, v, *, q_positions=None, k_positions=None,
     """
     return _flash(q, k, v, causal, window, attn_softcap, q_positions,
                   k_positions)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           window: int = 0, attn_softcap: float = 0.0,
+                           backend: str = "auto"):
+    """Paged serving decode attention (ISSUE 7, DESIGN §14).
+
+    q: (S, H, hd) — one query token per serve slot; k_pages, v_pages:
+    (P, page, KV, hd) shared pools; page_table: (S, max_pages) int32
+    physical page ids in logical order; lengths: (S,) int32 valid tokens
+    per slot (current token included).  ``backend='auto'`` follows the
+    repo's kernel/oracle/dispatch rule: the Mosaic kernel on accelerators,
+    the jnp oracle on CPU (interpret mode exists to *verify* the kernel —
+    tests force ``backend='pallas'`` for that).  Inference-only: no VJP.
+    """
+    if backend == "auto":
+        backend = "ref" if _on_cpu() else "pallas"
+    if backend == "ref":
+        return ref.paged_decode_attention_ref(
+            q, k_pages, v_pages, page_table, lengths, window=window,
+            attn_softcap=attn_softcap)
+    return paged_decode_attention_fwd(
+        q, k_pages, v_pages, page_table, lengths, window=window,
+        attn_softcap=attn_softcap, interpret=_on_cpu())
 
 
 def reorthogonalize(basis, w, mask, *, backend: str = "pallas"):

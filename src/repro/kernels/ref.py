@@ -74,6 +74,42 @@ def reorth_ref(basis, w, mask):
     return acc.astype(w.dtype), dots
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, page_table, lengths, *,
+                               window: int = 0, attn_softcap: float = 0.0):
+    """Same contract as kernels.ops.paged_decode_attention.
+
+    q: (S, H, hd) one query token per slot; k_pages, v_pages:
+    (P, page, KV, hd) shared page pools; page_table: (S, max_pages) int32
+    physical page ids in logical order; lengths: (S,) int32 valid tokens
+    per slot (including the current one).  Gathers each slot's logical
+    (W = max_pages * page) KV buffer through its table row, then runs the
+    exact einsum/softmax chain of models.attention.attn_decode so the paged
+    and rotating decode paths stay bitwise equal on CPU (the test pin).
+    ``window`` keeps only the trailing ``window`` tokens (sliding-window
+    layers); 0 disables it.  A slot with length 0 degenerates to a uniform
+    softmax over the masked row — finite garbage the scheduler ignores.
+    """
+    S, H, hd = q.shape
+    P, page, KV, _ = k_pages.shape
+    G = H // KV
+    W = page_table.shape[1] * page
+    kc = k_pages[page_table].reshape(S, W, KV, hd)
+    vc = v_pages[page_table].reshape(S, W, KV, hd)
+    qg = q.reshape(S, KV, G, hd)
+    s = jnp.einsum("bkgd,bwkd->bkgw", qg.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * hd ** -0.5
+    if attn_softcap:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+    kpos = jnp.arange(W)[None, :]
+    valid = kpos < lengths[:, None]
+    if window:
+        valid &= kpos >= lengths[:, None] - window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkd->bkgd", p, vc.astype(jnp.float32))
+    return o.reshape(S, H, hd).astype(q.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                         attn_softcap: float = 0.0):
     """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd) -> (B, H, Sq, hd).

@@ -161,6 +161,67 @@ def init_attn_cache(batch: int, buf_len: int, n_kv: int, head_dim: int, dtype):
     }
 
 
+def init_paged_attn_cache(n_pages: int, page_size: int, n_kv: int,
+                          head_dim: int, dtype):
+    """Paged KV pool for one attention layer (ISSUE 7, DESIGN §14).
+
+    Unlike the rotating buffer above there is no per-sequence axis: pages
+    are a shared pool, and each serve slot owns an ordered list of page ids
+    (the page table, held OUTSIDE the cache by the scheduler).  Page 0 is
+    reserved as a scratch page by convention — idle/stalled slots write
+    there and length masks keep it from ever being read.
+    """
+    return {
+        "k_pages": jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype),
+        "v_pages": jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype),
+    }
+
+
+def attn_decode_paged(params, cache, x, positions, page_table, *,
+                      n_heads: int, n_kv: int, head_dim: int,
+                      rope_fn: Callable, attn_softcap: float = 0.0,
+                      window: int = 0, backend: str = "auto"):
+    """Paged-cache decode: one new token per slot at PER-SLOT positions.
+
+    x: (S, 1, d); positions: (S,) int32 — the position each slot's token is
+    written at (so slots at different depths decode in one batch, the
+    capability the rotating ``attn_decode`` lacks: its scalar ``pos`` is
+    shared by the whole batch).  page_table: (S, max_pages) int32 physical
+    page ids in logical order; cache: init_paged_attn_cache pools.
+
+    Mirrors ``attn_decode``'s arithmetic exactly (same einsum chain on the
+    gathered logical buffer on the jnp oracle path) so the two are bitwise
+    equal on CPU when every slot sits at the same position and the logical
+    capacities match — the parity pin in tests/test_serve.py.
+    """
+    from ..kernels.ops import paged_decode_attention
+
+    S = x.shape[0]
+    page = cache["k_pages"].shape[1]
+    q = (x @ params["wq"]).reshape(S, 1, n_heads, head_dim)
+    k = (x @ params["wk"]).reshape(S, 1, n_kv, head_dim)
+    v = (x @ params["wv"]).reshape(S, 1, n_kv, head_dim)
+    if rope_fn is not None:
+        q = rope_fn(q, positions[:, None])
+        k = rope_fn(k, positions[:, None])
+
+    # scatter the new token through the page table; idle slots resolve to
+    # the scratch page (table entry 0) and are never read back
+    ppage = jnp.take_along_axis(page_table, (positions // page)[:, None],
+                                axis=1)[:, 0]
+    off = positions % page
+    kc = cache["k_pages"].at[ppage, off].set(
+        k[:, 0].astype(cache["k_pages"].dtype))
+    vc = cache["v_pages"].at[ppage, off].set(
+        v[:, 0].astype(cache["v_pages"].dtype))
+
+    o = paged_decode_attention(q.reshape(S, n_heads, head_dim), kc, vc,
+                               page_table, positions + 1, window=window,
+                               attn_softcap=attn_softcap, backend=backend)
+    out = o.reshape(S, 1, n_heads * head_dim).astype(x.dtype) @ params["wo"]
+    return out, {"k_pages": kc, "v_pages": vc}
+
+
 def attn_decode(params, cache, x, pos, *, n_heads: int, n_kv: int,
                 head_dim: int, rope_fn: Callable, attn_softcap: float = 0.0):
     """x: (B, 1, d); pos: scalar int32 (same for all sequences).

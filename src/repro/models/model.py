@@ -39,6 +39,12 @@ class ModelAPI(NamedTuple):
     decode_step: Callable
     train_batch_spec: Callable
     has_decode: bool
+    # paged serving decode (ISSUE 7): per-slot positions + shared page
+    # pools; None/False for families without it (audio enc-dec, M-RoPE vlm)
+    init_paged_cache: Any = None
+    paged_decode_step: Any = None
+    reset_slot: Any = None
+    has_paged: bool = False
 
 
 def _mrope_positions(cfg: ModelConfig, P: int, S_text: int):
@@ -86,6 +92,21 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             return {"tokens": tok, "labels": tok,
                     "mask": jax.ShapeDtypeStruct((global_batch, seq),
                                                  jnp.float32)}
+
+        def init_paged_cache(params, n_slots, n_pages, page_size):
+            return transformer.init_paged_cache(cfg, n_slots, n_pages,
+                                                page_size)
+
+        def paged_decode_step(params, cache, tokens, positions, page_table):
+            return transformer.paged_decode_step(params, cfg, cache, tokens,
+                                                 positions, page_table)
+
+        return ModelAPI(cfg=cfg, init=init, loss_fn=loss_fn, apply=apply,
+                        init_cache=init_cache, decode_step=decode_step,
+                        train_batch_spec=train_batch_spec, has_decode=True,
+                        init_paged_cache=init_paged_cache,
+                        paged_decode_step=paged_decode_step,
+                        reset_slot=transformer.reset_slot, has_paged=True)
 
     # ---------------------------------------------------------------- VLM --
     elif cfg.family == "vlm":

@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
-from .attention import (attn_decode, attn_forward, init_attn_cache,
-                        init_attn_params)
+from .attention import (attn_decode, attn_decode_paged, attn_forward,
+                        init_attn_cache, init_attn_params,
+                        init_paged_attn_cache)
 from .layers import (apply_mrope, apply_rope, cross_entropy, dense_init,
                      dtype_of, embed_init, rms_norm, softcap)
 from .mamba import (init_mamba_cache, init_mamba_params, mamba_decode,
@@ -318,3 +319,101 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
 
     x, new_cache = jax.lax.scan(period_fn, x, (params["periods"], cache))
     return logits_from_hidden(params, cfg, x), new_cache
+
+
+# ---------------------------------------------------------------------------
+# paged decode (per-slot positions — the serving path, ISSUE 7 / DESIGN §14)
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
+                     page_size: int):
+    """Paged decode cache: attention layers share a page pool (no slot
+    axis — ownership lives in the scheduler's page table); recurrent mixers
+    (mamba/mlstm/slstm) keep their per-slot state caches, which are
+    position-free and recycle via ``reset_slot``."""
+    spec = period_spec(cfg)
+    np_ = n_periods(cfg)
+    dt = dtype_of(cfg.param_dtype)
+
+    def layer(mixer):
+        if mixer in ("attn", "attn_local"):
+            return init_paged_attn_cache(n_pages, page_size, cfg.n_kv_heads,
+                                         cfg.head_dim_, dt)
+        return _layer_cache(cfg, mixer, n_slots, 1)
+
+    one = {f"l{i}": layer(mixer) for i, (mixer, _) in enumerate(spec)}
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (np_,) + x.shape).copy(), one)
+
+
+def _layer_decode_paged(lp, cc, x, positions, page_table, cfg: ModelConfig,
+                        mixer: str, mlp: str, rope_fn):
+    if mixer in ("attn", "attn_local"):
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        win = cfg.window if (mixer == "attn_local"
+                             or cfg.attn_pattern == "sliding") else 0
+        h, cc = attn_decode_paged(lp["mixer"], cc, h, positions, page_table,
+                                  n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                                  head_dim=cfg.head_dim_, rope_fn=rope_fn,
+                                  attn_softcap=cfg.attn_softcap, window=win)
+        x = x + h
+    elif mixer == "mamba":
+        h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+        h, cc = mamba_decode(lp["mixer"], cc, h, expand=cfg.ssm_expand,
+                             state=cfg.ssm_state, conv=cfg.ssm_conv)
+        x = x + h
+    elif mixer == "mlstm":
+        x, cc = mlstm_block_decode(lp["mixer"], cc, x, n_heads=cfg.n_heads,
+                                   norm_eps=cfg.norm_eps)
+    elif mixer == "slstm":
+        x, cc = slstm_block_decode(lp["mixer"], cc, x, n_heads=cfg.n_heads,
+                                   norm_eps=cfg.norm_eps)
+    if mlp == "dense":
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        h = (jax.nn.silu(h @ lp["mlp"]["w1"]) * (h @ lp["mlp"]["w3"])) \
+            @ lp["mlp"]["w2"]
+        x = x + h
+    elif mlp == "moe":
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        x = x + moe_forward(lp["mlp"], h, n_experts=cfg.n_experts,
+                            top_k=cfg.experts_per_tok,
+                            capacity_factor=cfg.capacity_factor)
+    return x, cc
+
+
+def paged_decode_step(params, cfg: ModelConfig, cache, tokens, positions,
+                      page_table):
+    """tokens: (S, 1); positions: (S,) int32 per-slot write positions;
+    page_table: (S, max_pages) int32.  -> (logits (S, 1, V), new_cache).
+
+    The paged cache never wraps: the scheduler enforces
+    prompt + max_new_tokens <= max_pages * page_size per slot.
+    """
+    spec = period_spec(cfg)
+    rope_fn = make_rope_fn(cfg)
+    x = embed_tokens(params, cfg, tokens)
+
+    def period_fn(x, inp):
+        pp, cc = inp
+        new_cc = {}
+        for i, (mixer, mlp) in enumerate(spec):
+            x, new_cc[f"l{i}"] = _layer_decode_paged(
+                pp[f"l{i}"], cc[f"l{i}"], x, positions, page_table, cfg,
+                mixer, mlp, rope_fn)
+        return x, new_cc
+
+    x, new_cache = jax.lax.scan(period_fn, x, (params["periods"], cache))
+    return logits_from_hidden(params, cfg, x), new_cache
+
+
+def reset_slot(cache, slot):
+    """Zero slot ``slot``'s recurrent (non-paged) per-slot states so a
+    recycled slot starts from the init state.  Paged pools pass through
+    untouched: freed pages are reclaimed by the scheduler's allocator and
+    stale contents are never read (length masks)."""
+    def leaf(path, x):
+        if any(getattr(p, "key", None) in ("k_pages", "v_pages")
+               for p in path):
+            return x
+        return x.at[:, slot].set(0)
+    return jax.tree_util.tree_map_with_path(leaf, cache)

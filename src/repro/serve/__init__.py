@@ -1,0 +1,15 @@
+"""Decentralized serving engine (ISSUE 7): continuous batching over a paged
+KV cache, with a consensus-view bridge into the live decentralized trainer."""
+from .bridge import ConsensusBridge, ConsensusSnapshot, served_divergence
+from .engine import Request, ServeEngine
+from .paging import OutOfPages, PageAllocator
+
+__all__ = [
+    "ConsensusBridge",
+    "ConsensusSnapshot",
+    "OutOfPages",
+    "PageAllocator",
+    "Request",
+    "ServeEngine",
+    "served_divergence",
+]

@@ -1,0 +1,84 @@
+"""Consensus-view serving bridge: serve snapshots of a LIVE flat trainer.
+
+The paper's decentralized learners never hold one canonical model — each
+learner a has its own w_a, and the closest thing to "the model" is the
+consensus mean w̄ = (1/n) Σ w_a.  This bridge snapshots that mean out of a
+running ``Trainer`` (flat or pytree engine — ``params_tree`` handles both)
+and hot-swaps it into a :class:`~repro.serve.engine.ServeEngine` without
+retracing (same shapes, ``set_params``).
+
+Because training keeps moving while a snapshot is being served, the bridge
+quantifies TWO kinds of gap:
+
+  * **staleness** — how far training has advanced past the served snapshot
+    (``steps_behind``), plus the learner spread sigma_w = sqrt(sigma_w^2)
+    at snapshot time vs now.  When the paper's self-adjusting LR is doing
+    its job, sigma_w stays bounded and the served mean is a faithful proxy
+    for every learner.
+  * **served-output divergence** — what that parameter gap does to actual
+    served logits: top-1 agreement and logit deltas between the snapshot
+    and the current consensus mean on a probe batch
+    (:func:`served_divergence`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.util import learner_var
+
+
+@dataclasses.dataclass(frozen=True)
+class ConsensusSnapshot:
+    params: Any               # consensus mean, single-learner pytree
+    step: int                 # trainer step the snapshot was taken at
+    consensus_dist: float     # sigma_w = sqrt(sigma_w^2) at snapshot time
+
+
+class ConsensusBridge:
+    """Snapshot the consensus mean out of a live trainer for serving."""
+
+    def __init__(self, trainer):
+        self.trainer = trainer
+
+    def _stacked(self, state):
+        return self.trainer.params_tree(state)
+
+    def snapshot(self, state) -> ConsensusSnapshot:
+        stacked = self._stacked(state)
+        mean = jax.tree_util.tree_map(
+            lambda x: jnp.mean(x.astype(jnp.float32), axis=0), stacked)
+        dist = float(jnp.sqrt(learner_var(stacked)))
+        return ConsensusSnapshot(params=mean, step=int(state.step),
+                                 consensus_dist=dist)
+
+    def staleness(self, state, snap: ConsensusSnapshot) -> Dict[str, float]:
+        """How far the live trainer has moved past a served snapshot."""
+        stacked = self._stacked(state)
+        return {
+            "steps_behind": int(state.step) - snap.step,
+            "consensus_dist_snapshot": snap.consensus_dist,
+            "consensus_dist_now": float(jnp.sqrt(learner_var(stacked))),
+        }
+
+
+def served_divergence(api, params_served, params_live, tokens) -> Dict[str, float]:
+    """Logit-level gap between a served snapshot and the live consensus.
+
+    tokens: (B, S) int32 probe prompts.  Both parameter sets run the same
+    prefill forward; returns top-1 agreement over all positions plus mean /
+    max absolute logit deltas (over the logical vocab).
+    """
+    batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
+    v = api.cfg.vocab
+    a = np.asarray(api.apply(params_served, batch)[..., :v], np.float32)
+    b = np.asarray(api.apply(params_live, batch)[..., :v], np.float32)
+    agree = float(np.mean(np.argmax(a, -1) == np.argmax(b, -1)))
+    diff = np.abs(a - b)
+    return {"top1_agreement": agree,
+            "mean_abs_logit_diff": float(diff.mean()),
+            "max_abs_logit_diff": float(diff.max())}

@@ -33,6 +33,7 @@ WORKLOADS = (
     "bench_kernels",
     "bench_throughput",
     "roofline_report",
+    "serving",
     "matrix",
 )
 # gates/libraries, not workloads: no training entrypoint of their own
@@ -66,8 +67,10 @@ def test_workload_survives_smoke(name, bench_tmp_results, capsys):
     # (fig2 returns its losses dict); only int exit codes can fail
     assert not (isinstance(rc, int) and rc), f"{name} --smoke exited {rc}"
     out = capsys.readouterr().out
-    # bench_kernels prints per-kernel rows: bench_kernel_<name>
-    stem = {"bench_kernels": "bench_kernel"}.get(name, name)
+    # bench_kernels prints per-kernel rows: bench_kernel_<name>;
+    # serving's summary row matches its results table (bench_serving.csv)
+    stem = {"bench_kernels": "bench_kernel",
+            "serving": "bench_serving"}.get(name, name)
     assert any(line.startswith(stem) for line in out.splitlines()), (
         f"{name} --smoke printed no `{stem},us,derived` contract row:\n"
         f"{out}")

@@ -40,3 +40,7 @@ def test_serve_batched_main_path(monkeypatch, capsys):
     out = capsys.readouterr().out
     assert "tok/s aggregate" in out
     assert "sequences:" in out
+    # the example now drives the serve engine: slots + request accounting
+    assert "slots=2" in out and "requests=4" in out
+    # 4 requests x 3 new tokens, every token counted (incl. the first)
+    assert "12 tokens" in out

@@ -1,0 +1,273 @@
+"""Serving subsystem tests (ISSUE 7): paged-decode parity against the
+rotating-buffer path, the continuous-batching engine's scheduling
+invariants, and the consensus-view bridge.
+
+Parity strategy (DESIGN §14): when every slot shares the same position and
+the paged cache's logical capacity (max_pages * page_size) equals the
+rotating buffer length, `paged_decode_step` must be BITWISE equal to
+`decode_step` — the paged oracle gathers the logical K/V buffer through the
+page table and then runs the exact einsum/softmax chain of the rotating
+path, so any drift means a real indexing bug, not float noise.  The
+engine-level tests then cover what the rotating path cannot do at all:
+ragged per-slot positions, mid-flight joins, slot recycling, and
+page-pool exhaustion.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.serve import (ConsensusBridge, OutOfPages, PageAllocator,
+                         ServeEngine, served_divergence)
+
+PAGE, MAX_PAGES = 4, 4
+BUF = PAGE * MAX_PAGES          # rotating buf == paged logical capacity
+
+
+def _model(arch):
+    cfg = get_config(arch).smoke_config()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return api, params
+
+
+@pytest.fixture(scope="module")
+def dense():
+    return _model("transformer-100m")
+
+
+def _shuffled_table(n_slots, seed=0):
+    """Non-identity page table: distinct physical pages (never page 0) in
+    shuffled order, so parity also proves the gather really indirects."""
+    rng = np.random.default_rng(seed)
+    pages = rng.permutation(np.arange(1, 1 + n_slots * MAX_PAGES))
+    return jnp.asarray(pages.reshape(n_slots, MAX_PAGES), jnp.int32)
+
+
+# -- paged vs rotating decode: bitwise ---------------------------------------
+
+@pytest.mark.parametrize("arch", ["transformer-100m",        # dense
+                                  "granite-moe-3b-a800m",    # moe
+                                  "xlstm-350m"])             # ssm
+def test_paged_decode_bitwise_matches_rotating(arch):
+    """Six shared-position steps crossing a page boundary (page_size=4),
+    through a shuffled page table, across the architecture families."""
+    api, params = _model(arch)
+    B = 3
+    cache_r = api.init_cache(params, B, BUF)
+    cache_p = api.init_paged_cache(params, B, 1 + B * MAX_PAGES, PAGE)
+    table = _shuffled_table(B)
+    key = jax.random.PRNGKey(1)
+    for pos in range(6):
+        toks = jax.random.randint(jax.random.fold_in(key, pos), (B, 1), 0,
+                                  api.cfg.vocab, jnp.int32)
+        lr_, cache_r = api.decode_step(params, cache_r, toks, pos)
+        lp_, cache_p = api.paged_decode_step(
+            params, cache_p, toks, jnp.full((B,), pos, jnp.int32), table)
+        np.testing.assert_array_equal(
+            np.asarray(lr_[..., :api.cfg.vocab]),
+            np.asarray(lp_[..., :api.cfg.vocab]),
+            err_msg=f"{arch} pos={pos}")
+
+
+def test_paged_decode_matches_prefill_logits(dense):
+    """Token-at-a-time paged decode reproduces the prefill (apply) logits
+    to float tolerance — the engine's prefill-rides-decode contract."""
+    api, params = dense
+    S = 7
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, S), 0,
+                              api.cfg.vocab, jnp.int32)
+    full = np.asarray(api.apply(params, {"tokens": toks})[0, :, :api.cfg.vocab])
+    cache = api.init_paged_cache(params, 1, 1 + MAX_PAGES, PAGE)
+    table = jnp.arange(1, 1 + MAX_PAGES, dtype=jnp.int32)[None]
+    got = []
+    for pos in range(S):
+        lg, cache = api.paged_decode_step(
+            params, cache, toks[:, pos:pos + 1],
+            jnp.full((1,), pos, jnp.int32), table)
+        got.append(np.asarray(lg[0, 0, :api.cfg.vocab]))
+    np.testing.assert_allclose(np.stack(got), full, atol=1e-4, rtol=1e-4)
+
+
+def test_paged_decode_ragged_positions_match_solo_runs(dense):
+    """Slots at DIFFERENT positions in one fused step (impossible on the
+    rotating path) must each match a solo run of the same stream."""
+    api, params = dense
+    key = jax.random.PRNGKey(3)
+    streams = [jax.random.randint(jax.random.fold_in(key, i), (n,), 0,
+                                  api.cfg.vocab, jnp.int32)
+               for i, n in enumerate((6, 3, 1))]
+    solo = []
+    for s in streams:
+        cache = api.init_paged_cache(params, 1, 1 + MAX_PAGES, PAGE)
+        table = jnp.arange(1, 1 + MAX_PAGES, dtype=jnp.int32)[None]
+        for pos in range(s.shape[0]):
+            lg, cache = api.paged_decode_step(
+                params, cache, s[pos][None, None],
+                jnp.full((1,), pos, jnp.int32), table)
+        solo.append(np.asarray(lg[0, 0, :api.cfg.vocab]))
+
+    B = len(streams)
+    cache = api.init_paged_cache(params, B, 1 + B * MAX_PAGES, PAGE)
+    table = _shuffled_table(B, seed=5)
+    # stagger the slots so the batched run ends with ragged positions
+    maxlen = max(s.shape[0] for s in streams)
+    for step in range(maxlen):
+        toks = np.zeros((B, 1), np.int32)
+        positions = np.zeros((B,), np.int32)
+        live = []
+        for i, s in enumerate(streams):
+            off = step - (maxlen - s.shape[0])   # slot i starts late
+            if 0 <= off < s.shape[0]:
+                toks[i, 0] = int(s[off])
+                positions[i] = off
+                live.append(i)
+        lg, cache = api.paged_decode_step(
+            params, cache, jnp.asarray(toks), jnp.asarray(positions), table)
+        for i in live:
+            if positions[i] == streams[i].shape[0] - 1:
+                np.testing.assert_allclose(
+                    np.asarray(lg[i, 0, :api.cfg.vocab]), solo[i],
+                    atol=1e-5, rtol=1e-5, err_msg=f"slot {i}")
+
+
+# -- page allocator -----------------------------------------------------------
+
+def test_page_allocator_never_hands_out_scratch():
+    a = PageAllocator(5)
+    got = sorted(a.alloc() for _ in range(4))
+    assert got == [1, 2, 3, 4]
+    with pytest.raises(OutOfPages):
+        a.alloc()
+    a.free([2, 4])
+    assert a.free_pages == 2 and a.alloc() in (2, 4)
+
+
+# -- engine scheduling --------------------------------------------------------
+
+def _isolated(api, params, prompt, max_new):
+    e = ServeEngine(api, params, n_slots=1, page_size=PAGE, max_len=BUF)
+    r = e.submit(prompt, max_new)
+    e.run()
+    return list(r.generated)
+
+
+def test_engine_midflight_join_matches_isolated(dense):
+    """Requests joining a RUNNING batch (slot recycling, no retrace) decode
+    exactly the tokens they would get alone.  Dense family on purpose:
+    MoE capacity-factor routing is batch-composition-dependent."""
+    api, params = dense
+    rng = np.random.default_rng(0)
+    jobs = [(rng.integers(1, api.cfg.vocab, n).tolist(), m)
+            for n, m in ((3, 5), (7, 3), (1, 6), (5, 4), (2, 5))]
+    expect = [_isolated(api, params, p, m) for p, m in jobs]
+
+    eng = ServeEngine(api, params, n_slots=2, page_size=PAGE, max_len=BUF)
+    eng.warmup()
+    reqs = [eng.submit(p, m) for p, m in jobs]
+    eng.run()
+    assert [list(r.generated) for r in reqs] == expect
+    # every page returned on eviction; slots reused across 5 jobs on 2 slots
+    assert eng.alloc.free_pages == eng.n_pages - 1
+    assert all(s.state == "free" for s in eng.slots)
+
+
+def test_engine_stall_on_page_exhaustion_recovers(dense):
+    """A pool too small for both slots stalls one mid-flight; it must
+    resume after an eviction and still decode the isolated tokens."""
+    api, params = dense
+    rng = np.random.default_rng(1)
+    p0, p1 = (rng.integers(1, api.cfg.vocab, n).tolist() for n in (3, 7))
+    expect = [_isolated(api, params, p0, 5), _isolated(api, params, p1, 3)]
+    eng = ServeEngine(api, params, n_slots=2, page_size=PAGE, max_len=BUF,
+                      n_pages=4)   # 3 real pages < 2 + 3 needed at once
+    r0, r1 = eng.submit(p0, 5), eng.submit(p1, 3)
+    eng.run()
+    assert eng.stall_events > 0
+    assert [list(r0.generated), list(r1.generated)] == expect
+
+
+def test_engine_static_admission_blocks_head_of_line(dense):
+    """Static mode admits only full batches: the second wave must not start
+    before the first fully drains (the baseline's defining behavior)."""
+    api, params = dense
+    eng = ServeEngine(api, params, n_slots=2, page_size=PAGE, max_len=BUF,
+                      admission="static")
+    short = eng.submit([5], 2)       # finishes fast...
+    long = eng.submit([5, 6, 7], 6)  # ...but its slot idles until this ends
+    late = eng.submit([9], 2)
+    eng.run()
+    assert all(r.done for r in (short, long, late))
+    # head-of-line blocking: the late request could not start before the
+    # long one finished, even though short's slot was free much earlier
+    assert late.first_token_step > long.finish_step - 1
+
+
+def test_engine_eos_evicts_early(dense):
+    api, params = dense
+    prompt = [3, 1, 4]
+    full = _isolated(api, params, prompt, 6)
+    eng = ServeEngine(api, params, n_slots=2, page_size=PAGE, max_len=BUF)
+    r = eng.submit(prompt, 6, eos_id=full[1])
+    eng.run()
+    assert r.generated == full[:2] and r.done
+    assert eng.alloc.free_pages == eng.n_pages - 1
+
+
+def test_engine_rejects_oversized_request(dense):
+    api, params = dense
+    eng = ServeEngine(api, params, n_slots=1, page_size=PAGE, max_len=BUF)
+    with pytest.raises(AssertionError, match="max_len"):
+        eng.submit(list(range(1, BUF)), 2)
+
+
+# -- consensus bridge ---------------------------------------------------------
+
+def test_bridge_staleness_and_divergence(dense):
+    from repro.core import AlgoConfig, MultiLearnerTrainer
+    from repro.models.model import make_synthetic_batch
+    from repro.optim import sgd
+
+    api, params = dense
+    n = 4
+    tr = MultiLearnerTrainer(
+        api.loss_fn, sgd(0.05),
+        AlgoConfig(algo="dpsgd", topology="ring", n_learners=n),
+        engine="flat")
+    key = jax.random.PRNGKey(0)
+    st = tr.init(key, params)
+
+    def batch(i):
+        b = make_synthetic_batch(api.cfg, jax.random.PRNGKey(i), n * 2, 16)
+        return jax.tree_util.tree_map(
+            lambda x: x.reshape((n, 2) + x.shape[1:]), b)
+
+    for i in range(2):
+        st, _ = tr.train_step(st, batch(i))
+    bridge = ConsensusBridge(tr)
+    snap = bridge.snapshot(st)
+    assert snap.step == 2 and snap.consensus_dist >= 0
+
+    # serve from the snapshot while training keeps moving
+    eng = ServeEngine(api, snap.params, n_slots=2, page_size=PAGE,
+                      max_len=BUF)
+    r = eng.submit([5, 9, 3], 3)
+    for i in range(2, 5):
+        st, _ = tr.train_step(st, batch(i))
+        if eng.has_work:
+            eng.step()
+    eng.run()
+    assert r.done and len(r.generated) == 3
+
+    stale = bridge.staleness(st, snap)
+    assert stale["steps_behind"] == 3
+    assert stale["consensus_dist_now"] >= 0
+
+    live = bridge.snapshot(st)
+    div = served_divergence(api, snap.params, live.params,
+                            np.array([[5, 9, 3, 1]]))
+    assert 0.0 <= div["top1_agreement"] <= 1.0
+    assert div["max_abs_logit_diff"] >= div["mean_abs_logit_diff"] >= 0
+    eng.set_params(live.params)   # hot-swap must not raise (no retrace)
