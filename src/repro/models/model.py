@@ -97,9 +97,11 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             return transformer.init_paged_cache(cfg, n_slots, n_pages,
                                                 page_size)
 
-        def paged_decode_step(params, cache, tokens, positions, page_table):
+        def paged_decode_step(params, cache, tokens, positions, page_table,
+                              advance=None):
             return transformer.paged_decode_step(params, cfg, cache, tokens,
-                                                 positions, page_table)
+                                                 positions, page_table,
+                                                 advance)
 
         return ModelAPI(cfg=cfg, init=init, loss_fn=loss_fn, apply=apply,
                         init_cache=init_cache, decode_step=decode_step,

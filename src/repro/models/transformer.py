@@ -346,8 +346,22 @@ def init_paged_cache(cfg: ModelConfig, n_slots: int, n_pages: int,
         lambda x: jnp.broadcast_to(x[None], (np_,) + x.shape).copy(), one)
 
 
+def _keep_slots(advance, new_cc, old_cc):
+    """Per-slot select on a recurrent layer cache (leading axis = slot):
+    slots with advance=False keep their old state bitwise.  Attention
+    caches never come through here — their stale writes land in the
+    scratch page and are excluded by length masks instead."""
+    if advance is None:
+        return new_cc
+
+    def sel(n, o):
+        return jnp.where(advance.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+
+    return jax.tree_util.tree_map(sel, new_cc, old_cc)
+
+
 def _layer_decode_paged(lp, cc, x, positions, page_table, cfg: ModelConfig,
-                        mixer: str, mlp: str, rope_fn):
+                        mixer: str, mlp: str, rope_fn, advance):
     if mixer in ("attn", "attn_local"):
         h = rms_norm(x, lp["norm1"], cfg.norm_eps)
         win = cfg.window if (mixer == "attn_local"
@@ -359,15 +373,18 @@ def _layer_decode_paged(lp, cc, x, positions, page_table, cfg: ModelConfig,
         x = x + h
     elif mixer == "mamba":
         h = rms_norm(x, lp["norm1"], cfg.norm_eps)
-        h, cc = mamba_decode(lp["mixer"], cc, h, expand=cfg.ssm_expand,
-                             state=cfg.ssm_state, conv=cfg.ssm_conv)
+        h, cc_new = mamba_decode(lp["mixer"], cc, h, expand=cfg.ssm_expand,
+                                 state=cfg.ssm_state, conv=cfg.ssm_conv)
+        cc = _keep_slots(advance, cc_new, cc)
         x = x + h
     elif mixer == "mlstm":
-        x, cc = mlstm_block_decode(lp["mixer"], cc, x, n_heads=cfg.n_heads,
-                                   norm_eps=cfg.norm_eps)
+        x, cc_new = mlstm_block_decode(lp["mixer"], cc, x, n_heads=cfg.n_heads,
+                                       norm_eps=cfg.norm_eps)
+        cc = _keep_slots(advance, cc_new, cc)
     elif mixer == "slstm":
-        x, cc = slstm_block_decode(lp["mixer"], cc, x, n_heads=cfg.n_heads,
-                                   norm_eps=cfg.norm_eps)
+        x, cc_new = slstm_block_decode(lp["mixer"], cc, x, n_heads=cfg.n_heads,
+                                       norm_eps=cfg.norm_eps)
+        cc = _keep_slots(advance, cc_new, cc)
     if mlp == "dense":
         h = rms_norm(x, lp["norm2"], cfg.norm_eps)
         h = (jax.nn.silu(h @ lp["mlp"]["w1"]) * (h @ lp["mlp"]["w3"])) \
@@ -382,9 +399,14 @@ def _layer_decode_paged(lp, cc, x, positions, page_table, cfg: ModelConfig,
 
 
 def paged_decode_step(params, cfg: ModelConfig, cache, tokens, positions,
-                      page_table):
+                      page_table, advance=None):
     """tokens: (S, 1); positions: (S,) int32 per-slot write positions;
-    page_table: (S, max_pages) int32.  -> (logits (S, 1, V), new_cache).
+    page_table: (S, max_pages) int32; advance: optional (S,) bool — slots
+    with advance=False run through the batch shape-stably but keep their
+    recurrent (mamba/mlstm/slstm) state bitwise unchanged (their attention
+    write still lands in the scratch page).  The engine uses it for FREE
+    and page-stalled slots; None means every slot advances.
+    -> (logits (S, 1, V), new_cache).
 
     The paged cache never wraps: the scheduler enforces
     prompt + max_new_tokens <= max_pages * page_size per slot.
@@ -399,7 +421,7 @@ def paged_decode_step(params, cfg: ModelConfig, cache, tokens, positions,
         for i, (mixer, mlp) in enumerate(spec):
             x, new_cc[f"l{i}"] = _layer_decode_paged(
                 pp[f"l{i}"], cc[f"l{i}"], x, positions, page_table, cfg,
-                mixer, mlp, rope_fn)
+                mixer, mlp, rope_fn, advance)
         return x, new_cc
 
     x, new_cache = jax.lax.scan(period_fn, x, (params["periods"], cache))

@@ -27,7 +27,23 @@ Admission policies:
 
 If the page pool runs dry mid-flight the affected slot STALLS: it is not
 advanced (its token is re-fed next step), its masked write lands in the
-scratch page, and it resumes as soon as an eviction frees pages.
+scratch page, and it resumes as soon as an eviction frees pages.  Slots
+that must not make progress this step — FREE slots and page-stalled ones —
+are excluded from the ``advance`` mask passed to ``paged_decode_step``, so
+their recurrent per-slot state (mamba conv/ssm, xLSTM C/n/m) stays bitwise
+frozen; the scratch page covers only the attention K/V write.  As a second
+line of defense ``reset_slot`` runs at admission as well as at eviction.
+If EVERY active slot is stalled the engine raises :class:`OutOfPages`
+instead of spinning: pages are only ever freed by an eviction, an eviction
+requires some slot to advance, so an all-stalled step can never make
+progress again (size ``n_pages`` for the expected concurrency instead).
+
+MoE caveat: capacity-factor routing in ``moe_forward`` drops tokens as a
+function of BATCH composition, so for moe-family models the tokens served
+for a prompt can depend on which other requests are co-scheduled (and an
+identical prompt may decode differently under different load).  Dense,
+ssm, and hybrid families are batch-composition-independent; parity tests
+pin moe only at the single-step level for this reason.
 """
 from __future__ import annotations
 
@@ -42,16 +58,17 @@ from .paging import OutOfPages, PageAllocator
 
 FREE, PREFILL, DECODE = "free", "prefill", "decode"
 
-# shared jit cache so many engines over one model compile once
-# (keyed by the underlying paged_decode_step callable, kept alive by the ref)
-_JIT_CACHE: dict = {}
-
 
 def _jitted(fn):
-    ent = _JIT_CACHE.get(id(fn))
-    if ent is None or ent[0] is not fn:
-        _JIT_CACHE[id(fn)] = ent = (fn, jax.jit(fn, donate_argnums=(1,)))
-    return ent[1]
+    """Many engines over one ModelAPI compile once: the jitted step is
+    cached as an attribute of the underlying ``paged_decode_step``
+    callable itself, so it lives exactly as long as the model API does
+    (no global registry to leak across models)."""
+    cached = getattr(fn, "_serve_jitted", None)
+    if cached is None:
+        cached = jax.jit(fn, donate_argnums=(1,))
+        fn._serve_jitted = cached
+    return cached
 
 
 @dataclasses.dataclass
@@ -143,6 +160,11 @@ class ServeEngine:
             slot.req = self.queue.popleft()
             slot.pos = 0
             slot.state = PREFILL
+            # defense in depth vs eviction-time reset: a recycled slot must
+            # start from pristine recurrent state no matter what ran (or
+            # idled) in it since the last eviction
+            if self.api.reset_slot is not None:
+                self.cache = self.api.reset_slot(self.cache, slot.index)
 
     def _ensure_page(self, slot: _Slot) -> bool:
         """Allocate the page slot.pos falls in, if not already owned.
@@ -177,12 +199,14 @@ class ServeEngine:
 
     def warmup(self) -> None:
         """Compile the step function before any request is admitted (all
-        writes land in the scratch page; no state advances)."""
+        writes land in the scratch page; the all-False advance mask keeps
+        every slot's recurrent state bitwise untouched)."""
         S = self.n_slots
         import jax.numpy as jnp
         logits, self.cache = self._step_fn(
             self.params, self.cache, jnp.zeros((S, 1), jnp.int32),
-            jnp.zeros((S,), jnp.int32), jnp.asarray(self.page_table))
+            jnp.zeros((S,), jnp.int32), jnp.asarray(self.page_table),
+            jnp.zeros((S,), bool))
         jax.block_until_ready(logits)
 
     def step(self) -> int:
@@ -198,6 +222,7 @@ class ServeEngine:
         S = self.n_slots
         tokens = np.zeros((S, 1), np.int32)
         positions = np.zeros((S,), np.int32)
+        adv_mask = np.zeros((S,), bool)
         advance = []
         for slot in active:
             if not self._ensure_page(slot):
@@ -209,12 +234,25 @@ class ServeEngine:
             else:
                 tokens[slot.index, 0] = req.generated[-1]
             positions[slot.index] = slot.pos
+            adv_mask[slot.index] = True
             advance.append(slot)
+
+        if not advance:
+            # every active slot is page-stalled.  Pages are only freed by
+            # evictions and an eviction needs some slot to advance, so no
+            # step can ever make progress again — fail fast rather than
+            # burn device steps until the run() wedge assert.
+            raise OutOfPages(
+                f"deadlock: all {len(active)} active slot(s) stalled on an "
+                f"exhausted pool of {self.n_pages - 1} page(s) and no "
+                "eviction can free any; size n_pages for the expected "
+                "concurrency")
 
         import jax.numpy as jnp
         logits, self.cache = self._step_fn(
             self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(positions), jnp.asarray(self.page_table))
+            jnp.asarray(positions), jnp.asarray(self.page_table),
+            jnp.asarray(adv_mask))
         lg = np.asarray(logits[:, 0, :self.api.cfg.vocab])  # blocks: host sync
 
         made = 0

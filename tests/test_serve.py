@@ -38,6 +38,11 @@ def dense():
     return _model("transformer-100m")
 
 
+@pytest.fixture(scope="module")
+def ssm():
+    return _model("xlstm-350m")
+
+
 def _shuffled_table(n_slots, seed=0):
     """Non-identity page table: distinct physical pages (never page 0) in
     shuffled order, so parity also proves the gather really indirects."""
@@ -154,11 +159,13 @@ def _isolated(api, params, prompt, max_new):
     return list(r.generated)
 
 
-def test_engine_midflight_join_matches_isolated(dense):
+@pytest.mark.parametrize("family", ["dense", "ssm"])
+def test_engine_midflight_join_matches_isolated(family, request):
     """Requests joining a RUNNING batch (slot recycling, no retrace) decode
-    exactly the tokens they would get alone.  Dense family on purpose:
-    MoE capacity-factor routing is batch-composition-dependent."""
-    api, params = dense
+    exactly the tokens they would get alone.  Dense + ssm (the ssm case
+    pins recurrent per-slot state across recycles); MoE is excluded on
+    purpose: capacity-factor routing is batch-composition-dependent."""
+    api, params = request.getfixturevalue(family)
     rng = np.random.default_rng(0)
     jobs = [(rng.integers(1, api.cfg.vocab, n).tolist(), m)
             for n, m in ((3, 5), (7, 3), (1, 6), (5, 4), (2, 5))]
@@ -174,10 +181,13 @@ def test_engine_midflight_join_matches_isolated(dense):
     assert all(s.state == "free" for s in eng.slots)
 
 
-def test_engine_stall_on_page_exhaustion_recovers(dense):
+@pytest.mark.parametrize("family", ["dense", "ssm"])
+def test_engine_stall_on_page_exhaustion_recovers(family, request):
     """A pool too small for both slots stalls one mid-flight; it must
-    resume after an eviction and still decode the isolated tokens."""
-    api, params = dense
+    resume after an eviction and still decode the isolated tokens.  The
+    ssm case pins that a stalled slot's recurrent state is frozen (no
+    spurious token-0 advance) while it waits."""
+    api, params = request.getfixturevalue(family)
     rng = np.random.default_rng(1)
     p0, p1 = (rng.integers(1, api.cfg.vocab, n).tolist() for n in (3, 7))
     expect = [_isolated(api, params, p0, 5), _isolated(api, params, p1, 3)]
@@ -187,6 +197,88 @@ def test_engine_stall_on_page_exhaustion_recovers(dense):
     eng.run()
     assert eng.stall_events > 0
     assert [list(r0.generated), list(r1.generated)] == expect
+
+
+def test_engine_idle_slot_then_late_join_ssm(ssm):
+    """A FREE slot idling alongside a running one must not accumulate
+    recurrent state: a request admitted into it later decodes exactly the
+    tokens it would get alone.  Regression for the unmasked paged step,
+    which advanced mamba/xLSTM state for EVERY slot each step — token-0
+    feeds polluted idle slots between eviction and the next admission."""
+    api, params = ssm
+    rng = np.random.default_rng(7)
+    pa = rng.integers(1, api.cfg.vocab, 4).tolist()   # long-runner
+    pb = rng.integers(1, api.cfg.vocab, 2).tolist()   # finishes early
+    pc = rng.integers(1, api.cfg.vocab, 3).tolist()   # late joiner
+    expect = [_isolated(api, params, p, m)
+              for p, m in ((pa, 8), (pb, 2), (pc, 4))]
+
+    eng = ServeEngine(api, params, n_slots=2, page_size=PAGE, max_len=BUF)
+    eng.warmup()
+    ra, rb = eng.submit(pa, 8), eng.submit(pb, 2)
+    while not rb.done:
+        eng.step()
+    # rb's slot is now FREE with an empty queue: it rides along idle for a
+    # few steps while ra keeps decoding (the pollution window), then rc is
+    # admitted into the recycled slot mid-flight
+    for _ in range(3):
+        eng.step()
+    rc = eng.submit(pc, 4)
+    eng.run()
+    assert [list(r.generated) for r in (ra, rb, rc)] == expect
+
+
+def test_engine_all_slots_stalled_raises_out_of_pages(dense):
+    """When every active slot is stalled on an exhausted pool no eviction
+    can ever free a page again — the engine must fail fast with OutOfPages
+    instead of busy-spinning no-op device steps into the wedge assert."""
+    api, params = dense
+    eng = ServeEngine(api, params, n_slots=2, page_size=PAGE, max_len=BUF,
+                      n_pages=2)            # one real page for two slots
+    eng.submit([1, 2], 6)                   # each needs 2 pages to finish
+    eng.submit([3, 4], 6)
+    with pytest.raises(OutOfPages, match="deadlock"):
+        eng.run()
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m",        # mlstm + slstm
+                                  "jamba-v0.1-52b"])   # hybrid: mamba
+def test_paged_decode_advance_mask_freezes_recurrent_state(arch):
+    """advance=False slots keep every recurrent (non-paged) cache leaf
+    bitwise unchanged through a fused step; advance=True slots move."""
+    api, params = _model(arch)
+    B = 2
+    cache = api.init_paged_cache(params, B, 1 + B * MAX_PAGES, PAGE)
+    table = _shuffled_table(B)
+
+    def recurrent_leaves(c):
+        out = {}
+
+        def leaf(path, x):
+            if not any(getattr(p, "key", None) in ("k_pages", "v_pages")
+                       for p in path):
+                out[jax.tree_util.keystr(path)] = np.asarray(x)
+            return x
+
+        jax.tree_util.tree_map_with_path(leaf, c)
+        return out
+
+    before = recurrent_leaves(cache)
+    assert before, "no recurrent leaves found — wrong arch for this test"
+    key = jax.random.PRNGKey(4)
+    mask = jnp.array([True, False])          # slot 1 frozen
+    for pos in range(3):
+        toks = jax.random.randint(jax.random.fold_in(key, pos), (B, 1), 0,
+                                  api.cfg.vocab, jnp.int32)
+        _, cache = api.paged_decode_step(
+            params, cache, toks, jnp.full((B,), pos, jnp.int32), table, mask)
+    after = recurrent_leaves(cache)
+    moved = 0
+    for k in before:                         # leaves are (periods, slot, ...)
+        np.testing.assert_array_equal(after[k][:, 1], before[k][:, 1],
+                                      err_msg=f"frozen slot drifted: {k}")
+        moved += int(not np.array_equal(after[k][:, 0], before[k][:, 0]))
+    assert moved > 0, "advancing slot's recurrent state never changed"
 
 
 def test_engine_static_admission_blocks_head_of_line(dense):
