@@ -11,9 +11,10 @@ test:
 # quick benchmark subset: one dynamics figure, the kernel microbench, the
 # straggler measurement (the async path), the engine regression harness
 # (flat vs pytree, BENCH_PR3.json), the GossipSchedule topology sweep, the
-# serving engine (continuous vs static batching + consensus bridge) and
-# the benchmark matrix (smoke mode: trimmed axes, short training,
-# emits BENCH_PR7.json)
+# serving engine (continuous vs static batching + consensus bridge), the
+# fault-injection harness (elastic membership: crash/rejoin under the
+# Supervisor) and the benchmark matrix (smoke mode: trimmed axes, short
+# training, emits BENCH_PR8.json)
 bench-smoke:
 	$(PYTHON) -m benchmarks.fig2_effective_lr
 	$(PYTHON) -m benchmarks.bench_kernels
@@ -21,6 +22,7 @@ bench-smoke:
 	$(PYTHON) -m benchmarks.bench_throughput
 	$(PYTHON) -m benchmarks.ablation_topology --smoke
 	$(PYTHON) -m benchmarks.serving --smoke
+	$(PYTHON) -m benchmarks.faults --smoke
 	$(PYTHON) -m benchmarks.matrix --smoke
 
 # bench-smoke + the CSV output contract (benchmarks/README.md): every
@@ -37,7 +39,7 @@ bench-check:
 	    cat bench_smoke.out; exit $$status
 	$(PYTHON) -m benchmarks.check_contract bench_smoke.out \
 	    fig2_effective_lr bench_kernel fig3_straggler bench_throughput \
-	    ablation_topology bench_serving bench_matrix
+	    ablation_topology bench_serving bench_faults bench_matrix
 	$(PYTHON) -m benchmarks.check_regression "results/bench/BENCH_PR*.json"
 	$(PYTHON) -m benchmarks.trajectory
 

@@ -49,13 +49,17 @@ def train_fc(algo: str, lr: float, *, n: int = 5, local_batch: int = 400,
              topology: str = "random_pair", diag_every: int = 0,
              landscape_every: int = 0, autolr=None, probe_kwargs=None,
              dataset=None, optimizer=None, algo_kwargs=None,
-             engine: str = "auto"):
+             engine: str = "auto", fault_plan=None):
     """Returns dict(losses, diags, probes, us_per_step, trainer, state, loader).
 
     ``algo_kwargs`` are forwarded to AlgoConfig (adpsgd staleness bound /
     straggler injection: max_staleness, slow_learner, slow_factor);
     ``engine`` selects the trainer engine (DESIGN §11) — the matrix
-    harness sweeps it as a first-class axis.
+    harness sweeps it as a first-class axis.  ``fault_plan`` (a
+    ``repro.core.FaultPlan``) runs the training loop under a
+    :class:`~repro.core.Supervisor`: elastic membership, scripted
+    crash/rejoin/slow/drop faults, wedge detection — the seeded
+    injection path shared with the fault tests (DESIGN §15).
 
     Probes ride the trainer's hook seam (DESIGN §10): ``diag_every`` runs
     the paper diagnostics, ``landscape_every`` the curvature probe; results
@@ -104,10 +108,17 @@ def train_fc(algo: str, lr: float, *, n: int = 5, local_batch: int = 400,
                      probe_fn, on_result=on_probe)
 
     st = tr.init(key, params)
+    supervisor = None
+    if fault_plan is not None:
+        from repro.core import Membership, Supervisor
+        supervisor = Supervisor(tr, Membership(n), fault_plan)
+        st = tr.set_membership(st, supervisor.membership)
     losses, stale_max = [], 0.0
     if tr.probes_due(0):   # let a controller engage before the first step
         st, _ = tr.run_probes(st, loader.batch(50_000), step=0)
     # warm-up/compile step excluded from timing
+    if supervisor is not None:
+        st = supervisor.tick(st, 0)
     st, m = tr.train_step(st, loader.batch(0))
     t0 = time.perf_counter()
     for i in range(1, steps):
@@ -115,6 +126,8 @@ def train_fc(algo: str, lr: float, *, n: int = 5, local_batch: int = 400,
             t_probe = time.perf_counter()
             st, _ = tr.run_probes(st, loader.batch(50_000 + i), step=i)
             t0 += time.perf_counter() - t_probe   # keep step timing clean
+        if supervisor is not None:
+            st = supervisor.tick(st, i)
         st, m = tr.train_step(st, loader.batch(i))
         losses.append(float(m.loss))
         stale_max = max(stale_max, float(m.staleness_max))
@@ -122,7 +135,7 @@ def train_fc(algo: str, lr: float, *, n: int = 5, local_batch: int = 400,
     return {"losses": losses, "diags": diags, "probes": probes,
             "us_per_step": dt * 1e6, "trainer": tr, "state": st,
             "loader": loader, "staleness_max": stale_max,
-            "controller": controller}
+            "controller": controller, "supervisor": supervisor}
 
 
 def final_loss(losses, k: int = 10) -> float:

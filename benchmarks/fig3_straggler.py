@@ -1,8 +1,10 @@
 """Paper Fig. 3 + App. F: straggler immunity, measured on the real code path.
 
 Trains sync pairwise DPSGD vs async AD-PSGD with an injected straggler
-(learner 0 takes ``slow_factor`` ticks per local step) through the actual
-MultiLearnerTrainer and reports, per algorithm:
+(learner 0 takes ``slow_factor`` ticks per local step, injected through
+``FaultPlan.straggler`` — the same seeded fault path the elastic-membership
+harness replays, DESIGN §15) through the actual MultiLearnerTrainer and
+reports, per algorithm:
 
   * measured us/step of the jitted train step (the real compute cost)
   * effective wall-clock per tick under the straggler: synchronous gossip
@@ -21,6 +23,8 @@ from __future__ import annotations
 
 import time
 
+from repro.core import FaultPlan
+
 from .common import final_loss, parse_smoke, train_fc, write_table
 
 SLOW_FACTORS = (1, 2, 5)
@@ -38,8 +42,9 @@ def main(argv=None):
     # inflation does) — train it once, reuse across the sweep
     sync = train_fc("dpsgd", LR, n=N, steps=steps)
     for slow in slow_factors:
-        async_kw = dict(max_staleness=TAU, slow_learner=0, slow_factor=slow)
-        adp = train_fc("adpsgd", LR, n=N, steps=steps, algo_kwargs=async_kw)
+        adp = train_fc("adpsgd", LR, n=N, steps=steps,
+                       algo_kwargs=dict(max_staleness=TAU),
+                       fault_plan=FaultPlan.straggler(0, slow))
         for name, run, tick_scale in (("dpsgd_sync", sync, slow),
                                       ("adpsgd", adp, 1)):
             us = run["us_per_step"]

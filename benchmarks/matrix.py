@@ -13,6 +13,9 @@ registry maps each cell onto one of the existing runners:
     sweep: contraction bound + loss per schedule)
   * ``large_batch`` -> `table1_large_batch.run_cell` (AdaScale-style
     batch/LR scaling axis — the paper's Table 1 regime)
+  * ``elastic``     -> `faults.measure_cell` (crash / consensus-rejoin /
+    seeded chaos under the membership Supervisor: recovery time and
+    post-resize throughput, ISSUE 8)
   * ``serving``     -> `serving.measure_cell` (continuous vs static
     batching under open-loop Poisson arrivals: tokens/s + p50/p99 latency
     on the paged decode path, ISSUE 7)
@@ -39,7 +42,7 @@ import time
 
 from . import schema
 
-CURRENT_PR = 7   # bump per PR: the emitted artifact is BENCH_PR<N>.json
+CURRENT_PR = 8   # bump per PR: the emitted artifact is BENCH_PR<N>.json
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +81,14 @@ SPEC = MatrixSpec(
             "topology": ("random_pair",),
             "batch_scale": (1, 2, 4),
         },
+        # elastic sweeps the fault scenario under the membership harness:
+        # crash+consensus-rejoin and the seeded chaos schedule (DESIGN §15)
+        "elastic": {
+            "algo": ("dpsgd", "adpsgd"),
+            "engine": ("flat",),
+            "topology": ("random_pair",),
+            "fault": ("crash_rejoin", "chaos"),
+        },
         # serving sweeps the ADMISSION engine, not the trainer engine; the
         # greedy/solo axes are degenerate but keep the cell key canonical
         "serving": {
@@ -97,6 +108,9 @@ SPEC = MatrixSpec(
         "topology": {"topology": ("full", "ring", "random_pair", "solo")},
         # ssgd_autolr's probe compile dominates smoke wall-clock: full only
         "large_batch": {"algo": ("ssgd", "dpsgd"), "batch_scale": (1, 4)},
+        # one scripted scenario per algo keeps smoke wall-clock bounded;
+        # the chaos schedule runs in the full sweep
+        "elastic": {"fault": ("crash_rejoin",)},
     },
 )
 
@@ -161,6 +175,15 @@ def _run_large_batch(axes: dict, smoke: bool):
     metrics = {k: float(r[k]) for k in
                ("us_per_step", "final_loss", "autolr_scale")}
     return metrics, {"nB": r["nB"], "lr": r["lr"]}
+
+
+@workload("elastic")
+def _run_elastic(axes: dict, smoke: bool):
+    # recovery-time + post-resize throughput under the seeded fault
+    # harness (DESIGN §15): the acceptance metrics for the elastic fleet
+    from .faults import measure_cell
+    return measure_cell(axes["algo"], axes["fault"],
+                        engine=axes["engine"], smoke=smoke)
 
 
 @workload("serving")

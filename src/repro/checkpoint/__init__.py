@@ -1,3 +1,5 @@
-from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from .checkpoint import (save_checkpoint, restore_checkpoint, latest_step,
+                         verify_checkpoint)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "verify_checkpoint"]

@@ -1,17 +1,28 @@
-"""Flat-npz pytree checkpointing with atomic writes and step indexing.
+"""Flat-npz pytree checkpointing with crash-safe writes and step indexing.
 
 Layout:  <dir>/ckpt_<step>.npz   keys are '/'-joined pytree paths.
 Restore requires a template pytree (for structure + dtypes) — standard for
 pure-JAX frameworks; the trainer's init() provides it.
+
+Crash safety (DESIGN §15): a learner can die MID-WRITE, so a checkpoint
+only becomes visible via an atomic rename of a fully-written, fsynced
+temp file, and carries a content digest (sha256 over the sorted key/array
+bytes, stored as the ``__digest__`` entry).  ``restore_checkpoint``
+verifies the digest and, when asked for the latest step, transparently
+falls back to the newest UNDAMAGED checkpoint — a truncated or
+bit-flipped file is reported and skipped, never silently loaded.
 """
 from __future__ import annotations
 
+import hashlib
 import os
 import re
 import tempfile
 
 import jax
 import numpy as np
+
+DIGEST_KEY = "__digest__"
 
 
 def _flatten(tree):
@@ -24,31 +35,91 @@ def _flatten(tree):
     return out
 
 
+def _digest(arrays: dict) -> str:
+    h = hashlib.sha256()
+    for key in sorted(arrays):
+        if key == DIGEST_KEY:
+            continue
+        a = np.ascontiguousarray(arrays[key])
+        h.update(key.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
 def save_checkpoint(directory: str, step: int, tree) -> str:
     os.makedirs(directory, exist_ok=True)
     arrays = _flatten(tree)
+    arrays[DIGEST_KEY] = np.frombuffer(
+        _digest(arrays).encode(), dtype=np.uint8)
     path = os.path.join(directory, f"ckpt_{step}.npz")
     fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        np.savez(f, **arrays)
-    os.replace(tmp, path)  # atomic on POSIX
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())       # durable before it becomes visible
+        os.replace(tmp, path)  # atomic on POSIX
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
     return path
 
 
-def latest_step(directory: str):
+def _steps(directory: str):
     if not os.path.isdir(directory):
-        return None
-    steps = [int(m.group(1)) for f in os.listdir(directory)
-             if (m := re.fullmatch(r"ckpt_(\d+)\.npz", f))]
+        return []
+    return sorted((int(m.group(1)) for f in os.listdir(directory)
+                   if (m := re.fullmatch(r"ckpt_(\d+)\.npz", f))))
+
+
+def latest_step(directory: str):
+    steps = _steps(directory)
     return max(steps) if steps else None
 
 
+def verify_checkpoint(directory: str, step: int) -> bool:
+    """True iff ``ckpt_<step>.npz`` exists, unzips, and its content digest
+    matches — i.e. the file survived whatever killed its writer."""
+    path = os.path.join(directory, f"ckpt_{step}.npz")
+    try:
+        with np.load(path) as data:
+            if DIGEST_KEY not in data.files:
+                return False            # pre-digest file or torn write
+            want = bytes(data[DIGEST_KEY]).decode()
+            arrays = {k: data[k] for k in data.files if k != DIGEST_KEY}
+        return _digest(arrays) == want
+    except Exception:
+        return False
+
+
 def restore_checkpoint(directory: str, template, step: int | None = None):
-    """Returns (tree, step); raises FileNotFoundError if nothing saved."""
+    """Returns (tree, step); raises FileNotFoundError if nothing loadable.
+
+    ``step=None`` scans from the NEWEST step down, skipping corrupt or
+    truncated files (a learner killed mid-write leaves at worst a stale
+    ``.tmp``, but a torn pre-digest file from an older layout, or disk
+    damage, must not poison the restore).  An explicit ``step`` is strict:
+    corruption raises ``ValueError``.
+    """
     if step is None:
-        step = latest_step(directory)
-        if step is None:
+        candidates = _steps(directory)
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints in {directory}")
+        for s in reversed(candidates):
+            if verify_checkpoint(directory, s):
+                step = s
+                break
+        else:
+            raise FileNotFoundError(
+                f"no uncorrupted checkpoint in {directory} "
+                f"(tried steps {candidates})")
+    elif not verify_checkpoint(directory, step):
+        raise ValueError(
+            f"checkpoint ckpt_{step}.npz is corrupt or predates the "
+            "digest format; refusing to load it explicitly")
     path = os.path.join(directory, f"ckpt_{step}.npz")
     with np.load(path) as data:
         flat = _flatten(template)

@@ -6,13 +6,18 @@ from .topology import (full_matrix, ring_matrix, torus_matrix, pair_partners,
                        random_pair_matrix, hierarchical_matrix,
                        exponential_matrix, is_doubly_stochastic, spectral_gap,
                        make_mixing_fn)
-from .schedule import (GossipSchedule, make_schedule, spectral_gap_profile,
+from .schedule import (GossipSchedule, make_schedule, reschedule,
+                       spectral_gap_profile,
                        SCHEDULED_TOPOLOGIES, DETERMINISTIC_TOPOLOGIES)
 from .flatstate import FlatMeta, flat_meta, max_concat_elems
 from .trainer import MultiLearnerTrainer, ProbeHook, TrainState, StepMetrics
+from .membership import Membership, MemberState, admit
+from .faults import (FaultEvent, FaultPlan, FaultReport, Supervisor,
+                     apply_plan)
 from .diagnostics import DiagStats, compute_diagnostics
 from .smoothing import smoothed_loss, estimate_smoothness
-from .util import learner_mean, learner_var
+from .util import (learner_mean, learner_var, masked_learner_mean,
+                   masked_learner_var)
 
 __all__ = [
     "AlgoConfig", "mix_einsum", "mix_ppermute_ring", "mix_ppermute_pair",
@@ -20,10 +25,13 @@ __all__ = [
     "full_matrix", "ring_matrix", "torus_matrix", "random_pair_matrix",
     "hierarchical_matrix", "exponential_matrix", "is_doubly_stochastic",
     "spectral_gap", "make_mixing_fn",
-    "GossipSchedule", "make_schedule", "spectral_gap_profile",
+    "GossipSchedule", "make_schedule", "reschedule", "spectral_gap_profile",
     "SCHEDULED_TOPOLOGIES", "DETERMINISTIC_TOPOLOGIES",
     "MultiLearnerTrainer", "ProbeHook", "TrainState",
     "StepMetrics", "FlatMeta", "flat_meta", "max_concat_elems",
+    "Membership", "MemberState", "admit",
+    "FaultEvent", "FaultPlan", "FaultReport", "Supervisor", "apply_plan",
     "DiagStats", "compute_diagnostics", "smoothed_loss", "estimate_smoothness",
-    "learner_mean", "learner_var",
+    "learner_mean", "learner_var", "masked_learner_mean",
+    "masked_learner_var",
 ]

@@ -46,7 +46,7 @@ __all__ = ["AlgoConfig", "mix_einsum", "mix_ppermute_ring", "mix_ppermute_pair",
            "mix_ppermute_ring_flat", "mix_ppermute_pair_flat",
            "mix_ppermute_schedule", "mix_ppermute_schedule_flat",
            "perturb_weights", "pair_partners", "mix_pair_gather",
-           "straggler_active_mask"]
+           "straggler_active_mask", "member_active_mask"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,7 +127,7 @@ def mix_ppermute_ring(stacked, axis_names, self_weight: float = 1.0 / 3.0):
     return jax.tree_util.tree_map(_mix, stacked)
 
 
-def mix_ppermute_pair(stacked, axis_names, step, remote=None):
+def mix_ppermute_pair(stacked, axis_names, step, remote=None, gate=None):
     """Pairwise gossip: partner = index XOR (1 << (step % log2 n)) — a
     deterministic hypercube schedule whose per-step matching matches the
     paper's random-neighbor rule in expectation, with ONE collective-permute.
@@ -137,6 +137,12 @@ def mix_ppermute_pair(stacked, axis_names, step, remote=None):
     is read from.  Synchronous pairwise DPSGD exchanges the live weights;
     AD-PSGD passes the stale *published* buffer here so a learner never
     blocks on a partner that is still mid-step (DESIGN §3).
+
+    ``gate`` (scalar 0/1 per shard — elastic membership, DESIGN §15): a
+    pair mixes only when BOTH endpoints gate on; otherwise each keeps its
+    own weights bitwise (solo).  The gate travels over the same permute,
+    so the realized matrix stays symmetric — and doubly stochastic over
+    the gated-on (active) set.
     """
     n = jax.lax.psum(1, axis_names)
     assert n & (n - 1) == 0, "pairwise ppermute gossip needs power-of-two learners"
@@ -144,6 +150,7 @@ def mix_ppermute_pair(stacked, axis_names, step, remote=None):
     log_n = int(math.log2(n))
     if remote is None:
         remote = stacked
+    g = None if gate is None else jnp.asarray(gate, jnp.float32)
     # static schedule per step value is traced; build all log_n permutations and
     # select by step % log_n using lax.switch to stay jittable.
     def make_branch(bit):
@@ -151,7 +158,11 @@ def mix_ppermute_pair(stacked, axis_names, step, remote=None):
         def _b(xr):
             x, r = xr
             other = jax.lax.ppermute(r, axis_names, perm)
-            return (0.5 * (x + other)).astype(x.dtype)
+            mixed = (0.5 * (x + other)).astype(x.dtype)
+            if g is None:
+                return mixed
+            both = (g * jax.lax.ppermute(g, axis_names, perm)) > 0.5
+            return jnp.where(both, mixed, x)
         return _b
 
     branches = [make_branch(b) for b in range(log_n)]
@@ -186,14 +197,15 @@ def mix_ppermute_ring_flat(stacked, axis_names, self_weight: float = 1.0 / 3.0):
     return meta.unflatten(mixed)
 
 
-def mix_ppermute_pair_flat(stacked, axis_names, step, remote=None):
+def mix_ppermute_pair_flat(stacked, axis_names, step, remote=None, gate=None):
     """Pairwise hypercube gossip on the flat (T_local, 128) view.
 
     Flat-store variant of mix_ppermute_pair: ONE collective-permute moving
     one lane-aligned buffer per step (DESIGN §11), in the params' own wire
     dtype (see mix_ppermute_ring_flat).  ``remote`` is the tree the
     partner's contribution is read from (stale published buffer for
-    AD-PSGD; defaults to the live weights).
+    AD-PSGD; defaults to the live weights).  ``gate``: see
+    mix_ppermute_pair — pairs mix only when both endpoints gate on.
     """
     n = jax.lax.psum(1, axis_names)
     assert n & (n - 1) == 0, "pairwise ppermute gossip needs power-of-two learners"
@@ -203,6 +215,7 @@ def mix_ppermute_pair_flat(stacked, axis_names, step, remote=None):
     wire = meta.wire_dtype()
     v = meta.flatten(stacked, dtype=wire)
     r = v if remote is None else flat_meta(remote).flatten(remote, dtype=wire)
+    g = None if gate is None else jnp.asarray(gate, jnp.float32)
 
     def make_branch(bit):
         perm = [(i, i ^ (1 << bit)) for i in range(n)]
@@ -210,7 +223,11 @@ def mix_ppermute_pair_flat(stacked, axis_names, step, remote=None):
         def _b(xr):
             x, rr = xr
             other = jax.lax.ppermute(rr, axis_names, perm)
-            return 0.5 * (x.astype(jnp.float32) + other.astype(jnp.float32))
+            mixed = 0.5 * (x.astype(jnp.float32) + other.astype(jnp.float32))
+            if g is None:
+                return mixed
+            both = (g * jax.lax.ppermute(g, axis_names, perm)) > 0.5
+            return jnp.where(both, mixed, x.astype(jnp.float32))
         return _b
 
     branches = [make_branch(b) for b in range(log_n)]
@@ -349,6 +366,23 @@ def straggler_active_mask(step, n: int, slow_learner: int, slow_factor: int):
     if slow_learner < 0 or slow_factor == 1:
         return jnp.ones((n,), bool)
     return (idx != slow_learner) | (step % slow_factor == 0)
+
+
+def member_active_mask(step, active, slow_every):
+    """(n,) bool: which fleet members complete a local step this tick.
+
+    The elastic generalization of :func:`straggler_active_mask` — instead
+    of one statically-configured straggler, every learner carries a dynamic
+    ``slow_every`` tick divisor (1 = full speed, k = one completed step per
+    k ticks, huge = wedged/hung) and a liveness bit.  Dead learners are
+    never active; ``slow_every[i] == straggler``'s ``slow_factor``
+    reproduces the legacy injection law exactly (``step % k == 0``).
+    All inputs may be traced — this runs inside the jitted step with the
+    membership arrays threaded as operands (DESIGN §15).
+    """
+    slow_every = jnp.asarray(slow_every, jnp.int32)
+    gate = (slow_every <= 1) | (step % jnp.maximum(slow_every, 1) == 0)
+    return jnp.asarray(active, bool) & gate
 
 
 def perturb_weights(key, params, std):

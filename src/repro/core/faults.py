@@ -1,0 +1,265 @@
+"""Deterministic fault injection + supervision for elastic fleets (DESIGN §15).
+
+Robustness claims need faults you can replay: a :class:`FaultPlan` is a
+seedable, fully-deterministic script of membership faults (crash at step
+s, rejoin at step t, slow-node, wedged-node, dropped gossip round) that
+the same seed reproduces bit-for-bit — the single source of truth for the
+vmap-trainer harness, the launch-path harness and the straggler benchmark
+(fig3 injects its slow learner through the same plan).
+
+The :class:`Supervisor` is the host-side control loop that a production
+deployment would run next to the fleet:
+
+  * it applies the plan's scripted faults (the "chaos monkey" half), and
+  * it DETECTS wedged learners it was never told about: a member whose
+    progress clock stalls past ``staleness_bound * grace`` ticks gets a
+    bounded number of recovery retries with doubling backoff windows, and
+    is evicted (→ ``Membership.crash`` → reschedule) when they run out.
+
+Detection reads the trainer's own per-learner ``clock`` (AD-PSGD threads
+one through the state); for synchronous DPSGD — where a wedged learner is
+unobservable from the lockstep state — progress is inferred from the
+membership's tick divisors, which is exactly the information a heartbeat
+side channel would carry.  Every intervention lands as a
+``set_membership`` operand swap, so the compiled step is never invalidated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from .membership import HUNG, Membership, admit
+
+__all__ = ["FaultEvent", "FaultPlan", "FaultReport", "Supervisor",
+           "apply_plan"]
+
+KINDS = ("crash", "rejoin", "slow", "recover", "hang", "drop_round")
+
+
+class FaultEvent(NamedTuple):
+    """One scripted fault.  ``arg``: slow-every divisor for ``slow``,
+    truthy = sticky (recovery-proof) for ``hang``, unused otherwise.
+    ``learner`` is ignored for ``drop_round`` (it is fleet-wide)."""
+    step: int
+    kind: str
+    learner: int = 0
+    arg: Any = None
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable, replayable schedule of faults (sorted by step)."""
+    events: Tuple[FaultEvent, ...] = ()
+
+    def __post_init__(self):
+        for ev in self.events:
+            assert ev.kind in KINDS, ev.kind
+        object.__setattr__(self, "events",
+                           tuple(sorted(self.events, key=lambda e: e.step)))
+
+    def at(self, step: int) -> List[FaultEvent]:
+        return [ev for ev in self.events if ev.step == step]
+
+    @property
+    def last_step(self) -> int:
+        return max((ev.step for ev in self.events), default=-1)
+
+    # -- canned plans ---------------------------------------------------------
+    @staticmethod
+    def straggler(learner: int, every: int, start: int = 0) -> "FaultPlan":
+        """A permanently slow node — fig3's injected straggler, now one
+        seeded code path with the rest of the fault harness."""
+        return FaultPlan((FaultEvent(start, "slow", learner, every),))
+
+    @staticmethod
+    def crash_rejoin(learner: int, crash_at: int,
+                     rejoin_at: Optional[int] = None) -> "FaultPlan":
+        evs = [FaultEvent(crash_at, "crash", learner)]
+        if rejoin_at is not None:
+            assert rejoin_at > crash_at, (crash_at, rejoin_at)
+            evs.append(FaultEvent(rejoin_at, "rejoin", learner))
+        return FaultPlan(tuple(evs))
+
+    @staticmethod
+    def random(seed: int, steps: int, capacity: int, *,
+               p_crash: float = 0.02, p_rejoin: float = 0.3,
+               p_slow: float = 0.02, p_drop: float = 0.02,
+               min_active: int = 2) -> "FaultPlan":
+        """A seeded chaos schedule.  Deterministic: same seed, same plan.
+        Never drives the simulated fleet below ``min_active`` live members
+        (a fleet of dead learners is not an interesting failure mode)."""
+        rng = np.random.default_rng(seed)
+        active = np.ones(capacity, bool)
+        evs: List[FaultEvent] = []
+        for step in range(steps):
+            if rng.random() < p_drop:
+                evs.append(FaultEvent(step, "drop_round"))
+            if active.sum() > min_active and rng.random() < p_crash:
+                i = int(rng.choice(np.flatnonzero(active)))
+                evs.append(FaultEvent(step, "crash", i))
+                active[i] = False
+            if (~active).any() and rng.random() < p_rejoin:
+                i = int(rng.choice(np.flatnonzero(~active)))
+                evs.append(FaultEvent(step, "rejoin", i))
+                active[i] = True
+            if active.sum() > min_active and rng.random() < p_slow:
+                i = int(rng.choice(np.flatnonzero(active)))
+                evs.append(FaultEvent(step, "slow", i,
+                                      int(rng.integers(2, 5))))
+        return FaultPlan(tuple(evs))
+
+
+@dataclasses.dataclass
+class FaultReport:
+    """What the supervisor did, step-stamped — the benchmark's raw
+    material for recovery-time measurement."""
+    crashes: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    rejoins: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    retries: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    evictions: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    dropped_rounds: int = 0
+
+    @property
+    def interventions(self) -> int:
+        return (len(self.crashes) + len(self.rejoins) + len(self.retries)
+                + len(self.evictions))
+
+
+def apply_plan(membership: Membership, plan: FaultPlan, step: int, *,
+               on_rejoin=None, sticky: Optional[set] = None,
+               report: Optional[FaultReport] = None) -> bool:
+    """Apply the plan's scripted events due at ``step`` to a Membership.
+
+    The ONE seeded injection path shared by the vmap-trainer Supervisor
+    and the launch (pjit/shard_map) harness.  ``on_rejoin(slot)`` runs
+    BEFORE the mask flips live (state surgery — e.g. :func:`admit` —
+    must clone the consensus of the pre-join active set).  Returns True
+    if this step's gossip round is dropped.
+    """
+    drop = False
+    for ev in plan.at(step):
+        if ev.kind == "crash" and membership.active[ev.learner]:
+            membership.crash(ev.learner)
+            if sticky is not None:
+                sticky.discard(ev.learner)
+            if report is not None:
+                report.crashes.append((step, ev.learner))
+        elif ev.kind == "rejoin" and not membership.active[ev.learner]:
+            if on_rejoin is not None:
+                on_rejoin(ev.learner)
+            membership.rejoin(ev.learner)
+            if report is not None:
+                report.rejoins.append((step, ev.learner))
+        elif ev.kind == "slow":
+            membership.set_slow(ev.learner, int(ev.arg))
+        elif ev.kind == "hang":
+            membership.hang(ev.learner)
+            if ev.arg and sticky is not None:
+                sticky.add(ev.learner)
+        elif ev.kind == "recover":
+            if sticky is not None:
+                sticky.discard(ev.learner)
+            membership.recover(ev.learner)
+        elif ev.kind == "drop_round":
+            drop = True
+            if report is not None:
+                report.dropped_rounds += 1
+    return drop
+
+
+@dataclasses.dataclass
+class Supervisor:
+    """Host-side fleet supervision: scripted fault injection + wedge
+    detection with bounded retry/backoff, over an elastic trainer.
+
+    ``tick(state, step)`` runs BEFORE the step's ``train_step`` call and
+    returns the (possibly membership-swapped) state.  Wedge policy: a
+    live learner silent for more than ``staleness_bound * grace *
+    2**retries`` supervisor ticks gets a recovery attempt (the doubling
+    factor is the backoff — each failed retry earns the learner a longer
+    leash), and is evicted once ``max_retries`` attempts are spent.
+    """
+    trainer: Any
+    membership: Membership
+    plan: FaultPlan = dataclasses.field(default_factory=FaultPlan)
+    staleness_bound: int = 4
+    grace: int = 2
+    max_retries: int = 2
+    admit_mode: str = "consensus"
+
+    report: FaultReport = dataclasses.field(default_factory=FaultReport)
+
+    def __post_init__(self):
+        cap = self.membership.capacity
+        self._last_clock = np.zeros(cap, np.int64)
+        self._stall = np.zeros(cap, np.int64)
+        self._retries = np.zeros(cap, np.int64)
+        self._sticky = set()           # recovery-proof (truly wedged) hangs
+        self._dropped = False          # last tick's drop_round flag
+
+    # -- one supervision tick -------------------------------------------------
+    def tick(self, state, step: int):
+        mem = self.membership
+        epoch0 = mem.epoch
+        box = [state]
+
+        def on_rejoin(slot):
+            # surgery first (clones the consensus of the CURRENT live
+            # set), then the mask flip — order matters
+            box[0] = admit(self.trainer, box[0], slot, mode=self.admit_mode)
+            self._stall[slot] = 0
+            self._retries[slot] = 0
+            self._last_clock[slot] = 0          # admit zeroed the clock
+
+        drop = apply_plan(mem, self.plan, step, on_rejoin=on_rejoin,
+                          sticky=self._sticky, report=self.report)
+        state = box[0]
+
+        self._detect(state, step)
+
+        if mem.epoch != epoch0 or drop or self._dropped:
+            state = self.trainer.set_membership(state, mem, drop_round=drop)
+        self._dropped = drop
+        return state
+
+    def _detect(self, state, step: int) -> None:
+        """Stall accounting + the retry/backoff/evict ladder."""
+        mem = self.membership
+        clock = getattr(state, "clock", None)
+        if clock is not None:          # AD-PSGD: real per-learner progress
+            c = np.asarray(clock)
+            advanced = c > self._last_clock
+            self._last_clock = np.maximum(self._last_clock, c)
+        else:                          # sync DPSGD: heartbeat-equivalent
+            se = mem.slow_every
+            advanced = (mem.active & (se < HUNG)
+                        & (step % np.maximum(se, 1) == 0))
+        self._stall = np.where(advanced | ~mem.active, 0, self._stall + 1)
+        base = self.staleness_bound * self.grace
+        for i in np.flatnonzero(mem.active):
+            if self._stall[i] <= base * (1 << int(self._retries[i])):
+                continue
+            if self._retries[i] < self.max_retries:
+                self._retries[i] += 1
+                self.report.retries.append((step, int(i)))
+                if i not in self._sticky:      # transient wedge: unstick it
+                    mem.recover(int(i))
+            else:
+                mem.crash(int(i))
+                self._sticky.discard(int(i))
+                self._stall[i] = 0
+                self._retries[i] = 0
+                self.report.evictions.append((step, int(i)))
+
+    # -- convenience driver ---------------------------------------------------
+    def run(self, state, batch_fn, steps: int, start: int = 0):
+        """Supervised loop: tick, step, repeat.  ``batch_fn(i)`` feeds the
+        stacked batch for host step ``i``.  Returns (state, losses)."""
+        losses = []
+        for i in range(start, start + steps):
+            state = self.tick(state, i)
+            state, m = self.trainer.train_step(state, batch_fn(i))
+            losses.append(float(m.loss))
+        return state, losses

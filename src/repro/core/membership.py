@@ -1,0 +1,214 @@
+"""Elastic learner membership for the decentralized fleet (DESIGN §15).
+
+Production fleets autoscale: learners join, leave, crash and rejoin
+mid-run, but the engine freezes ``n`` into FlatMeta, the schedule tables
+and the mesh.  This module makes the learner COUNT elastic without making
+any SHAPE elastic: the fleet is allocated at capacity ``N_max`` once, and
+liveness is data —
+
+  * :class:`Membership` is the host-side source of truth: the active mask,
+    per-learner incarnation counters (bumped on every (re)join so a stale
+    straggler from a previous life is distinguishable), per-learner
+    ``slow_every`` tick divisors (1 = healthy, k = degraded, huge =
+    wedged), and a fleet ``epoch`` that bumps on every change.
+  * :class:`MemberState` is the device-side bundle threaded through the
+    jitted step as a ``TrainState.members`` OPERAND (never a closed-over
+    constant — a jit cache silently reuses stale closure tables, which is
+    exactly the bug this design avoids).  A membership change is therefore
+    a table/operand swap: same shapes reuse the compiled step, a shape
+    change (schedule K/period changed with ``n_active``) retraces once.
+  * A dead learner is a permanently-inactive straggler: its row keeps zero
+    mixing weight (the fused kernel's ``active`` coefficient column and the
+    only-active matching/tables already mask it), its parameter/momentum/
+    buffer rows are left QUARANTINED in place for a later rejoin, and the
+    masked metrics/consensus exclude it bitwise.
+  * :func:`admit` is the state surgery for a (re)join: a fresh joiner
+    clones the consensus mean of the live learners into its slot
+    (``state_view``/``state_from_view`` keep it engine-agnostic); a
+    quarantine rejoin resumes from the parked rows.
+
+The scheduling half lives in :func:`core.schedule.reschedule` (conformant
+active-set table embedding) and :func:`core.topology.masked_pair_partners`
+(only-active random matching); the fault-injection harness that drives all
+of this is :mod:`core.faults`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import schedule as gsched
+
+__all__ = ["Membership", "MemberState", "HUNG", "admit"]
+
+# a wedged learner: never completes a step again until recovered (the
+# supervisor's staleness detector evicts it; 2^30 keeps step % safe in i32)
+HUNG = 1 << 30
+
+
+class MemberState(NamedTuple):
+    """Device-side membership bundle — a pytree of jit OPERANDS.
+
+    ``partners``/``coefs`` are the ``reschedule`` tables for elastic
+    deterministic-topology DPSGD ((period, K, n) i32 / (period, n, K+1)
+    f32); None for randomized matchings (drawn in-step from the mask) and
+    for AD-PSGD.
+    """
+    active: jnp.ndarray        # (n,) bool — live fleet members
+    incarnation: jnp.ndarray   # (n,) int32 — bumped per (re)join
+    slow_every: jnp.ndarray    # (n,) int32 — completes a step every k ticks
+    drop_round: jnp.ndarray    # () bool — this tick's gossip round is dropped
+    partners: Any = None
+    coefs: Any = None
+
+
+@dataclasses.dataclass
+class Membership:
+    """Host-side elastic fleet state (capacity-``N_max``, mutable masks)."""
+    capacity: int
+    active: Optional[np.ndarray] = None
+    incarnation: Optional[np.ndarray] = None
+    slow_every: Optional[np.ndarray] = None
+    epoch: int = 0               # fleet version: bumps on every change
+
+    def __post_init__(self):
+        assert self.capacity >= 1, self.capacity
+        if self.active is None:
+            self.active = np.ones((self.capacity,), bool)
+        self.active = np.asarray(self.active, bool).copy()
+        if self.incarnation is None:
+            self.incarnation = np.zeros((self.capacity,), np.int32)
+        if self.slow_every is None:
+            self.slow_every = np.ones((self.capacity,), np.int32)
+        self.incarnation = np.asarray(self.incarnation, np.int32).copy()
+        self.slow_every = np.asarray(self.slow_every, np.int32).copy()
+
+    # -- queries -------------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        return int(self.active.sum())
+
+    def active_indices(self) -> np.ndarray:
+        return np.flatnonzero(self.active)
+
+    # -- transitions (each bumps the fleet epoch) -----------------------------
+    def crash(self, i: int) -> None:
+        """Learner ``i`` dies/leaves: permanently-inactive straggler whose
+        rows stay quarantined in the state for a possible rejoin."""
+        assert 0 <= i < self.capacity, i
+        self.active[i] = False
+        self.slow_every[i] = 1
+        self.epoch += 1
+
+    leave = crash     # a graceful leave and a detected crash mask identically
+
+    def join(self, slot: Optional[int] = None) -> int:
+        """Activate an inactive slot (first free one by default); returns
+        the slot.  Bumps its incarnation — state surgery is the caller's
+        job (:func:`admit`)."""
+        if slot is None:
+            free = np.flatnonzero(~self.active)
+            if free.size == 0:
+                raise ValueError("fleet at capacity: no inactive slot")
+            slot = int(free[0])
+        assert 0 <= slot < self.capacity, slot
+        assert not self.active[slot], f"slot {slot} already active"
+        self.active[slot] = True
+        self.incarnation[slot] += 1
+        self.slow_every[slot] = 1
+        self.epoch += 1
+        return slot
+
+    rejoin = join
+
+    def set_slow(self, i: int, every: int) -> None:
+        """Degrade learner ``i`` to one completed step per ``every`` ticks."""
+        assert 0 <= i < self.capacity and every >= 1, (i, every)
+        self.slow_every[i] = every
+        self.epoch += 1
+
+    def hang(self, i: int) -> None:
+        """Wedge learner ``i``: it stays a member but never completes a
+        step — the supervisor's staleness detector is what evicts it."""
+        self.set_slow(i, HUNG)
+
+    def recover(self, i: int) -> None:
+        self.set_slow(i, 1)
+
+    # -- device bundle --------------------------------------------------------
+    def member_state(self, topology: Optional[str] = None, *,
+                     gossip_rounds: int = 1,
+                     drop_round: bool = False) -> MemberState:
+        """Build the jit-operand bundle for the CURRENT membership.
+
+        ``topology`` (DPSGD): deterministic topologies get their
+        ``reschedule`` tables embedded at fleet capacity; randomized
+        matchings (and AD-PSGD, which passes None) carry no tables — the
+        step draws the only-active matching from the mask.
+        """
+        partners = coefs = None
+        if topology is not None and topology.lower() not in (
+                "random_pair", "random_matching"):
+            s = gsched.reschedule(topology, self.active,
+                                  rounds=gossip_rounds)
+            partners = jnp.asarray(s.partners)
+            coefs = jnp.asarray(s.coefs)
+        return MemberState(
+            active=jnp.asarray(self.active),
+            incarnation=jnp.asarray(self.incarnation),
+            slow_every=jnp.asarray(self.slow_every),
+            drop_round=jnp.asarray(drop_round, bool),
+            partners=partners, coefs=coefs)
+
+
+def admit(trainer, state, slot: int, *, mode: str = "consensus"):
+    """State surgery for a learner (re)joining at ``slot``.
+
+    ``mode='consensus'``: the joiner clones the consensus mean of the
+    currently-ACTIVE learners (per ``state.members.active`` — call this
+    BEFORE flipping the slot live in the device state) into its parameter
+    and published-buffer rows and gets a freshly-initialized optimizer row
+    (momentum from a dead past would be stale curvature; the controller
+    scale is rewritten fleet-wide by the next AdaScale/AutoLR update).
+    ``mode='quarantine'``: resume from the rows parked at eviction —
+    parameters, momentum and published buffer are left untouched.
+
+    Either way the async bookkeeping (age/clock) restarts at zero.  The
+    grow/shrink round-trips through ``state_view``/``state_from_view`` so
+    the same code serves the flat and pytree engines; the flatten cost is
+    paid only at membership changes, never in the step.
+    """
+    assert mode in ("consensus", "quarantine"), mode
+    assert state.members is not None, "admit needs an elastic state"
+    if mode == "consensus":
+        view = trainer.state_view(state)
+        act = jnp.asarray(state.members.active)
+        denom = jnp.maximum(jnp.sum(act), 1)
+
+        def clone_row(x):
+            m = act.reshape((-1,) + (1,) * (x.ndim - 1))
+            mean = jnp.sum(jnp.where(m, x.astype(jnp.float32), 0.0),
+                           axis=0) / denom
+            return x.at[slot].set(mean.astype(x.dtype))
+
+        params = jax.tree_util.tree_map(clone_row, view.params)
+        buffer = view.buffer
+        if buffer is not None:     # the joiner publishes its cloned weights
+            buffer = jax.tree_util.tree_map(
+                lambda b, p: b.at[slot].set(p[slot]), view.buffer, params)
+        fresh = trainer.optimizer.init(
+            jax.tree_util.tree_map(lambda x: x[slot], params))
+        opt = jax.tree_util.tree_map(
+            lambda s, f: s.at[slot].set(jnp.asarray(f, s.dtype)),
+            view.opt_state, fresh)
+        state = trainer.state_from_view(
+            view._replace(params=params, opt_state=opt, buffer=buffer))
+    if state.age is not None:
+        state = state._replace(age=state.age.at[slot].set(0))
+    if state.clock is not None:
+        state = state._replace(clock=state.clock.at[slot].set(0))
+    return state

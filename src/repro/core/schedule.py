@@ -65,8 +65,9 @@ import numpy as np
 
 from . import topology as topo
 
-__all__ = ["GossipSchedule", "make_schedule", "spectral_gap_profile",
-           "SCHEDULED_TOPOLOGIES", "DETERMINISTIC_TOPOLOGIES"]
+__all__ = ["GossipSchedule", "make_schedule", "reschedule",
+           "spectral_gap_profile", "SCHEDULED_TOPOLOGIES",
+           "DETERMINISTIC_TOPOLOGIES"]
 
 # every topology make_schedule compiles (solo compiles to None on purpose)
 SCHEDULED_TOPOLOGIES = ("full", "ring", "torus", "random_pair",
@@ -95,6 +96,10 @@ class GossipSchedule:
     partners: np.ndarray       # (period, K, n) int32
     coefs: np.ndarray          # (period, n, K+1) f32
     step_mats: Optional[np.ndarray]  # (variants, n, n) f32; None if randomized
+    # elastic membership (``reschedule``): ``n`` is the fleet CAPACITY and
+    # ``active`` marks the live slots; inactive rows/cols are identity in
+    # every realized matrix.  None = the legacy fixed-n schedule.
+    active: Optional[np.ndarray] = None   # (n,) bool, or None
 
     # -- classification -----------------------------------------------------
     @property
@@ -115,7 +120,11 @@ class GossipSchedule:
         schedules; randomized schedules draw the matching from ``key``
         (round indexing is the caller's job — see ``step_rounds``)."""
         if self.randomized:
-            partner = topo.pair_partners(key, self.n)
+            if self.active is None:
+                partner = topo.pair_partners(key, self.n)
+            else:                 # elastic: only-active random matching
+                partner = topo.masked_pair_partners(
+                    key, jnp.asarray(self.active))
             solo = partner == jnp.arange(self.n)
             self_c = jnp.where(solo, 1.0, 0.5).astype(jnp.float32)
             return (partner[None].astype(jnp.int32),
@@ -155,10 +164,15 @@ class GossipSchedule:
         against.
         """
         if self.randomized:
-            m = topo.random_pair_matrix(key, self.n)
+            if self.active is None:     # legacy draw (bitwise-pinned)
+                draw = lambda k: topo.random_pair_matrix(k, self.n)  # noqa: E731
+            else:
+                act = jnp.asarray(self.active)
+                draw = lambda k: topo.partner_matrix(  # noqa: E731
+                    topo.masked_pair_partners(k, act), self.n)
+            m = draw(key)
             for j in range(1, self.rounds_per_step):
-                kj = jax.random.fold_in(key, j)
-                m = topo.random_pair_matrix(kj, self.n) @ m
+                m = draw(jax.random.fold_in(key, j)) @ m
             return m
         mats = jnp.asarray(self.step_mats)
         if self.step_mats.shape[0] == 1:
@@ -363,6 +377,81 @@ def make_schedule(topology: str, n: int, *,
 
 
 # ---------------------------------------------------------------------------
+# elastic membership: recompile a topology onto the live active set
+# ---------------------------------------------------------------------------
+
+def _identity_schedule(topology: str, cap: int, active: np.ndarray
+                       ) -> GossipSchedule:
+    return GossipSchedule(
+        name=topology, n=cap, K=1, period=1, rounds_per_step=1,
+        randomized=False, symmetric=True, perm_rounds=True,
+        partners=np.tile(np.arange(cap, dtype=np.int32), (1, 1, 1)),
+        coefs=np.concatenate([np.ones((1, cap, 1), np.float32),
+                              np.zeros((1, cap, 1), np.float32)], axis=-1),
+        step_mats=np.eye(cap, dtype=np.float32)[None], active=active)
+
+
+def reschedule(topology: str, active, *, rounds: int = 1) -> GossipSchedule:
+    """Recompile ``topology`` for the current active set of a capacity fleet.
+
+    ``active``: (capacity,) bool mask of live learners.  Returns a
+    capacity-sized :class:`GossipSchedule` whose realized matrices are the
+    identity on the inactive slots and EXACTLY ``make_schedule(topology,
+    n_active)``'s matrices on the active set (active-rank i plays physical
+    slot ``flatnonzero(active)[i]``) — so every realized matrix stays doubly
+    stochastic globally AND restricts to a conformant mixing matrix over
+    the live learners (the elastic conformance guarantee, DESIGN §15).
+
+    K is static per (topology, n_active): a membership change is a TABLE
+    swap — the elastic trainer threads these tables through the step as jit
+    operands (TrainState.members), so a same-shape swap reuses the compiled
+    step and a shape change retraces exactly once.  Randomized topologies
+    need no tables at all: they return a masked-draw schedule whose
+    matching is drawn over the active set inside the step.  A fleet with
+    <= 1 live learner (or 'solo') compiles to explicit identity tables
+    rather than ``make_schedule``'s None, keeping the operand plumbing
+    uniform.
+    """
+    active = np.ascontiguousarray(np.asarray(active, dtype=bool))
+    cap = int(active.shape[0])
+    idx = np.flatnonzero(active)
+    m = int(idx.size)
+    topology = topology.lower()
+    if topology not in SCHEDULED_TOPOLOGIES + ("solo",):
+        raise ValueError(f"unknown topology: {topology}")
+    if topology in ("random_pair", "random_matching") and m > 1:
+        r = 1 if topology == "random_pair" else max(1, rounds)
+        return GossipSchedule(
+            name=topology, n=cap, K=1, period=1, rounds_per_step=r,
+            randomized=True, symmetric=r == 1, perm_rounds=True,
+            partners=np.tile(np.arange(cap, dtype=np.int32), (1, 1, 1)),
+            coefs=np.concatenate([np.ones((1, cap, 1), np.float32),
+                                  np.zeros((1, cap, 1), np.float32)],
+                                 axis=-1),
+            step_mats=None, active=active)
+    inner = (None if (topology == "solo" or m <= 1)
+             else make_schedule(topology, m, rounds=rounds))
+    if inner is None:
+        return _identity_schedule(topology, cap, active)
+    P, K = inner.period, inner.K
+    partners = np.tile(np.arange(cap, dtype=np.int32), (P, K, 1))
+    coefs = np.zeros((P, cap, K + 1), np.float32)
+    coefs[:, :, 0] = 1.0                        # inactive rows: self-loops
+    partners[:, :, idx] = idx[inner.partners]   # active-rank -> physical slot
+    coefs[:, idx, :] = inner.coefs
+    step_mats = None
+    if inner.step_mats is not None:
+        V = inner.step_mats.shape[0]
+        step_mats = np.tile(np.eye(cap, dtype=np.float32), (V, 1, 1))
+        step_mats[np.ix_(np.arange(V), idx, idx)] = inner.step_mats
+    return GossipSchedule(
+        name=inner.name, n=cap, K=K, period=P,
+        rounds_per_step=inner.rounds_per_step, randomized=False,
+        symmetric=inner.symmetric, perm_rounds=inner.perm_rounds,
+        partners=partners, coefs=coefs, step_mats=step_mats, active=active)
+
+
+# ---------------------------------------------------------------------------
 # analyzer: measured consensus contraction vs the spectral-gap bound
 # ---------------------------------------------------------------------------
 
@@ -398,7 +487,19 @@ def spectral_gap_profile(schedule: Optional[GossipSchedule], *,
         return {"window": w, "per_step_gap": [0.0] * w,
                 "measured_rate": 1.0, "bound_rate": 1.0,
                 "measured_gap": 0.0, "gap_bound": 0.0}
-    n = schedule.n
+    # elastic (reschedule) schedules: contraction is defined OVER THE ACTIVE
+    # SET — inactive rows are identity by construction (they never couple to
+    # a live learner), so the profile restricts every step matrix to the
+    # active submatrix, which is exact, and measures consensus there.
+    sub = None
+    if schedule.active is not None:
+        sub = np.flatnonzero(np.asarray(schedule.active, bool))
+        if sub.size <= 1:
+            w = max(window, 1)
+            return {"window": w, "per_step_gap": [0.0] * w,
+                    "measured_rate": 1.0, "bound_rate": 1.0,
+                    "measured_gap": 0.0, "gap_bound": 0.0}
+    n = schedule.n if sub is None else int(sub.size)
     if not window:
         window = max(8, 2 * max(
             1, schedule.period // math.gcd(schedule.period,
@@ -411,6 +512,8 @@ def spectral_gap_profile(schedule: Optional[GossipSchedule], *,
     for t in range(window):
         kt = jax.random.fold_in(key, t)
         m = np.asarray(schedule.step_matrix(kt, t), np.float64)
+        if sub is not None:
+            m = m[np.ix_(sub, sub)]
         phi = m @ phi
         eta = float(np.linalg.norm(m - J, 2))
         etas.append(eta)

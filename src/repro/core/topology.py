@@ -20,6 +20,8 @@ __all__ = [
     "ring_matrix",
     "torus_matrix",
     "pair_partners",
+    "masked_pair_partners",
+    "partner_matrix",
     "random_pair_matrix",
     "hierarchical_matrix",
     "exponential_matrix",
@@ -81,6 +83,54 @@ def pair_partners(key: jax.Array, n: int) -> jnp.ndarray:
     partner = partner.at[a].set(b)
     partner = partner.at[b].set(a)
     return partner
+
+
+def masked_pair_partners(key: jax.Array, active, drop=None) -> jnp.ndarray:
+    """Random perfect matching over the ACTIVE slots of a capacity-n fleet.
+
+    ``active``: (n,) bool.  Inactive slots are always solo (partner[i] == i)
+    and no active slot is ever matched to an inactive one, so a dead
+    learner's row carries zero mixing weight without any table recompile —
+    the elastic-membership form of :func:`pair_partners` (DESIGN §15).
+    Same draw, same key: the active slots are paired consecutively along
+    ``pair_partners``'s random permutation with the inactive ones spliced
+    out, so an all-active fleet reproduces the legacy matching BITWISE
+    (elastic DPSGD/AD-PSGD with nobody dead == the pinned PR 1 trace).
+    ``drop`` (scalar bool) forces everyone solo — a dropped gossip round.
+
+    Jit-safe: the active count is a traced value; consecutive-rank pairing
+    of a permutation is an involution with only-active pairs by
+    construction (odd active count: the last-ranked slot stays solo).
+    """
+    active = jnp.asarray(active, bool)
+    n = active.shape[0]
+    idx = jnp.arange(n)
+    perm = jax.random.permutation(key, n)
+    act_in_order = active[perm]
+    # rank of each permutation position among the active entries so far:
+    # splicing out the inactive slots keeps the survivors' relative order
+    rank = jnp.cumsum(act_in_order) - 1
+    m = jnp.sum(active)
+    # slot_of_rank[r] = the active slot ranked r (inactive scatters dropped)
+    slot_of_rank = jnp.zeros((n,), perm.dtype).at[
+        jnp.where(act_in_order, rank, n)].set(perm, mode="drop")
+    rank_of_slot = jnp.zeros((n,), rank.dtype).at[perm].set(rank)
+    mate_rank = rank_of_slot ^ 1
+    paired = active & (mate_rank < m)
+    partner = jnp.where(paired, slot_of_rank[mate_rank % n], idx)
+    if drop is not None:
+        partner = jnp.where(drop, idx, partner)
+    return partner
+
+
+def partner_matrix(partner, n: int, dtype=jnp.float32) -> jnp.ndarray:
+    """Dense mixing matrix of an involutive partner vector: 0.5*(I + P).
+
+    Solo rows (partner[i] == i) come out exactly e_i, so the same formula
+    covers matched pairs, odd-n leftovers and masked-out (inactive) slots.
+    """
+    p = jnp.zeros((n, n), dtype).at[jnp.arange(n), partner].set(1.0)
+    return 0.5 * (jnp.eye(n, dtype=dtype) + p)
 
 
 def random_pair_matrix(key: jax.Array, n: int, dtype=jnp.float32) -> jnp.ndarray:

@@ -42,11 +42,15 @@ import jax
 import jax.numpy as jnp
 
 from . import schedule as gsched
+from . import topology as topo
 from .diagnostics import DiagStats, compute_diagnostics
-from .dpsgd import (AlgoConfig, mean_broadcast, mix_einsum, mix_pair_gather,
-                    pair_partners, perturb_weights, straggler_active_mask)
+from .dpsgd import (AlgoConfig, mean_broadcast, member_active_mask,
+                    mix_einsum, mix_pair_gather, pair_partners,
+                    perturb_weights, straggler_active_mask)
 from .flatstate import LANE, FlatMeta, flat_meta
-from .util import learner_mean, learner_var
+from .membership import MemberState, Membership
+from .util import (learner_mean, learner_var, masked_learner_mean,
+                   masked_learner_var)
 from ..optim import Optimizer, apply_updates
 
 
@@ -59,14 +63,19 @@ class TrainState(NamedTuple):
     buffer: Any = None    # last-published weights, stacked like params
     age: Any = None       # (n,) int32 ticks since each learner published
     clock: Any = None     # (n,) int32 completed local steps per learner
+    # -- elastic membership (None = legacy fixed fleet; DESIGN §15) --------
+    members: Any = None   # MemberState: masks/tables as jit OPERANDS
 
 
 class StepMetrics(NamedTuple):
-    loss: jnp.ndarray          # mean per-learner minibatch loss
-    grad_norm: jnp.ndarray     # ||g_a||
-    sigma_w_sq: jnp.ndarray    # weight variance across learners
+    loss: jnp.ndarray          # mean per-learner minibatch loss (active only)
+    grad_norm: jnp.ndarray     # ||g_a|| (consensus gradient, active only)
+    sigma_w_sq: jnp.ndarray    # weight variance across (active) learners
     staleness_mean: jnp.ndarray  # mean buffer age seen at gossip (adpsgd)
     staleness_max: jnp.ndarray   # max buffer age seen at gossip (adpsgd)
+    # -- elastic/AdaScale statistics (zero-filled on the ssgd paths) -------
+    n_active: jnp.ndarray = 0.0      # live learner count this tick
+    grad_sq_mean: jnp.ndarray = 0.0  # mean_i ||g_i||^2 over active learners
 
 
 def _select(mask, new, old):
@@ -75,6 +84,13 @@ def _select(mask, new, old):
         m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
         return jnp.where(m, a, b)
     return jax.tree_util.tree_map(_sel, new, old)
+
+
+def _per_learner_grad_sq(grads):
+    """(n,) f32: ||g_i||^2 per learner (the AdaScale gain statistic)."""
+    return sum(jnp.sum(jnp.square(g.astype(jnp.float32)),
+                       axis=tuple(range(1, g.ndim)))
+               for g in jax.tree_util.tree_leaves(grads))
 
 
 @dataclasses.dataclass
@@ -349,6 +365,101 @@ class MultiLearnerTrainer:
             return out
         return mix_einsum(stacked, s.step_matrix(key, step))
 
+    # -- elastic membership (DESIGN §15) --------------------------------------
+    def membership_state(self, membership: Membership, *,
+                         drop_round: bool = False) -> MemberState:
+        """Device-side membership bundle for THIS trainer's topology:
+        deterministic DPSGD schedules embed their ``reschedule`` tables,
+        randomized matchings and AD-PSGD draw from the mask in-step."""
+        topo_name = None
+        if (self.algo.algo == "dpsgd" and self._schedule is not None
+                and not self._schedule.randomized):
+            topo_name = self.algo.topology
+        return membership.member_state(
+            topo_name, gossip_rounds=self.algo.gossip_rounds,
+            drop_round=drop_round)
+
+    def set_membership(self, state: TrainState, membership: Membership, *,
+                       drop_round: bool = False) -> TrainState:
+        """Swap the current membership into a state (a table/operand swap:
+        same-shape swaps reuse the compiled step — never a retrace)."""
+        if self.algo.algo not in ("dpsgd", "adpsgd"):
+            raise ValueError("elastic membership rides the decentralized "
+                             f"paths, not {self.algo.algo}")
+        if getattr(self.optimizer, "wants_mixed", False):
+            raise ValueError(
+                "a mixing-matrix-corrected optimizer (decentlam) assumes a "
+                "static fleet — its drift term diverges when membership "
+                "changes the realized matrix; use plain (momentum-)SGD")
+        assert membership.capacity == self.algo.n_learners, \
+            (membership.capacity, self.algo.n_learners)
+        return state._replace(
+            members=self.membership_state(membership,
+                                          drop_round=drop_round))
+
+    def _member_rounds(self, mem: MemberState, key, step):
+        """The elastic analogue of ``schedule.step_rounds``: per-round
+        (partners (K, n), coefs (n, K+1)) tables for this step, built from
+        the ``members`` OPERANDS (mask / reschedule tables) so a membership
+        change never invalidates a jit cache through a stale closure.
+        A dropped gossip round degrades every row to the identity."""
+        n = self.algo.n_learners
+        if mem.partners is None:     # randomized: only-active matching
+            rps = (max(1, self.algo.gossip_rounds)
+                   if self.algo.topology == "random_matching" else 1)
+            out = []
+            for j in range(rps):
+                kj = key if j == 0 else jax.random.fold_in(key, j)
+                partner = topo.masked_pair_partners(kj, mem.active,
+                                                    drop=mem.drop_round)
+                solo = partner == jnp.arange(n)
+                self_c = jnp.where(solo, 1.0, 0.5).astype(jnp.float32)
+                out.append((partner[None].astype(jnp.int32),
+                            jnp.stack([self_c, 1.0 - self_c], axis=1)))
+            return out
+        period, K = mem.partners.shape[0], mem.partners.shape[1]
+        # rps is derivable from the OPERAND shape (rps == period for every
+        # deterministic schedule except one_peer_exp's one-round-per-step),
+        # so a resize that changes the table shape retraces with the right
+        # round structure by construction
+        rps = 1 if self.algo.topology == "one_peer_exp" else period
+        id_c = jnp.concatenate(
+            [jnp.ones((n, 1), jnp.float32), jnp.zeros((n, K), jnp.float32)],
+            axis=1)
+        out = []
+        for j in range(rps):
+            if rps % period == 0:
+                p, c = mem.partners[j % period], mem.coefs[j % period]
+            else:                    # time-varying (one_peer_exp)
+                ridx = (step * rps + j) % period
+                p, c = mem.partners[ridx], mem.coefs[ridx]
+            out.append((p, jnp.where(mem.drop_round, id_c, c)))
+        return out
+
+    def _mix_member_rounds(self, stacked, rounds, active):
+        """Unfused elastic mixing: apply ``_member_rounds`` tables to a
+        stacked tree / flat buffer.  Randomized matchings keep the O(P)
+        pair-gather form (solo rows — including every inactive one —
+        bitwise untouched); deterministic rounds realize the round matrix.
+        Quarantined rows are zeroed before the einsum and restored after,
+        so even a non-finite parked row cannot bleed through the 0-weight
+        columns (0 * NaN is NaN in an einsum, not in a where)."""
+        out = stacked
+        randomized = self._schedule is not None and self._schedule.randomized
+        for partners, coefs in rounds:
+            if randomized:      # drop/solo already folded into the partners
+                out = mix_pair_gather(out, partners[0])
+                continue
+            n = partners.shape[1]
+            m = jnp.zeros((n, n), jnp.float32)
+            m = m.at[jnp.arange(n), jnp.arange(n)].add(coefs[:, 0])
+            for k in range(partners.shape[0]):
+                m = m.at[jnp.arange(n), partners[k]].add(coefs[:, 1 + k])
+            safe = _select(active, out,
+                           jax.tree_util.tree_map(jnp.zeros_like, out))
+            out = _select(active, mix_einsum(safe, m), out)
+        return out
+
     # -- one training step ----------------------------------------------------
     def _train_step(self, state: TrainState, stacked_batch):
         """stacked_batch leaves: (n, B_local, ...)."""
@@ -400,7 +511,25 @@ class MultiLearnerTrainer:
         elif algo.algo == "dpsgd":
             # gradients at LOCAL weights (the whole point of the paper)
             losses, grads = jax.vmap(grad_fn)(state.params, stacked_batch)
-            if algo.gossip_order == "mix_then_descend":   # paper Eq. 2
+            mem = state.members
+            if mem is not None:       # elastic fleet (DESIGN §15)
+                act = mem.active
+                rounds = ([] if self._schedule is None
+                          else self._member_rounds(mem, k_mix, state.step))
+                if algo.gossip_order == "mix_then_descend":
+                    mixed = self._mix_member_rounds(state.params, rounds, act)
+                    updates, opt_new = self._opt_update(
+                        grads, state.opt_state, state.params, mixed)
+                    stepped = apply_updates(mixed, updates)
+                else:
+                    updates, opt_new = self._opt_update(
+                        grads, state.opt_state, state.params, state.params)
+                    stepped = self._mix_member_rounds(
+                        apply_updates(state.params, updates), rounds, act)
+                # dead learners' quarantined rows stay bitwise frozen
+                new_params = _select(act, stepped, state.params)
+                opt_state = _select(act, opt_new, state.opt_state)
+            elif algo.gossip_order == "mix_then_descend":   # paper Eq. 2
                 # _mix_sched keeps the gather form for random matchings
                 # (O(P), and the reference AD-PSGD reduces to it at
                 # staleness 0 — bitwise, asserted in tests) and the
@@ -422,16 +551,28 @@ class MultiLearnerTrainer:
             #   remote  — what partners read: the last-published buffer, or
             #             the live weights once the staleness bound is hit
             n = algo.n_learners
-            active = straggler_active_mask(state.step, n, algo.slow_learner,
-                                           algo.slow_factor)
-            fresh = age >= algo.max_staleness      # forced publish (bound tau)
+            mem = state.members
+            if mem is not None:       # elastic fleet (DESIGN §15)
+                # a dead learner is a permanently-inactive straggler: never
+                # active, never force-published, never matched
+                active = member_active_mask(state.step, mem.active,
+                                            mem.slow_every)
+                fresh = (age >= algo.max_staleness) & mem.active
+                stale_seen = jnp.where(fresh | ~mem.active, 0, age)
+                partner = topo.masked_pair_partners(k_mix, mem.active,
+                                                    drop=mem.drop_round)
+            else:
+                active = straggler_active_mask(state.step, n,
+                                               algo.slow_learner,
+                                               algo.slow_factor)
+                fresh = age >= algo.max_staleness   # forced publish (tau)
+                stale_seen = jnp.where(fresh, 0, age)
+                partner = pair_partners(k_mix, n)
             remote = _select(fresh, state.params, buffer)
-            stale_seen = jnp.where(fresh, 0, age)
             stale_mean = jnp.mean(stale_seen.astype(jnp.float32))
             stale_max = jnp.max(stale_seen).astype(jnp.float32)
 
             losses, grads = jax.vmap(grad_fn)(state.params, stacked_batch)
-            partner = pair_partners(k_mix, n)
             mixed = mix_pair_gather(state.params, partner, remote)
             updates, opt_state_new = self._opt_update(
                 grads, state.opt_state, state.params, mixed)
@@ -449,17 +590,35 @@ class MultiLearnerTrainer:
         else:
             raise ValueError(algo.algo)
 
+        mem = state.members
+        gsq = _per_learner_grad_sq(grads)
+        if mem is None:
+            nact = jnp.float32(algo.n_learners)
+            loss = jnp.mean(losses)
+            g_mean = learner_mean(grads)
+            gsq_mean = jnp.mean(gsq)
+            sigma = learner_var(new_params)
+        else:        # active-only statistics: evicted rows are bitwise-absent
+            act = mem.active
+            nact = jnp.maximum(jnp.sum(act), 1).astype(jnp.float32)
+            loss = jnp.sum(jnp.where(act, losses, 0.0)) / nact
+            g_mean = masked_learner_mean(grads, act)
+            gsq_mean = jnp.sum(jnp.where(act, gsq, 0.0)) / nact
+            sigma = masked_learner_var(new_params, act)
         metrics = StepMetrics(
-            loss=jnp.mean(losses),
+            loss=loss,
             grad_norm=jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                                    for g in jax.tree_util.tree_leaves(
-                                       learner_mean(grads)))),
-            sigma_w_sq=learner_var(new_params),
+                                       g_mean))),
+            sigma_w_sq=sigma,
             staleness_mean=stale_mean,
             staleness_max=stale_max,
+            n_active=nact,
+            grad_sq_mean=gsq_mean,
         )
         return TrainState(new_params, opt_state, state.step + 1, state.rng,
-                          buffer=buffer, age=age, clock=clock), metrics
+                          buffer=buffer, age=age, clock=clock,
+                          members=state.members), metrics
 
     def _train_step_flat(self, state: TrainState, stacked_batch):
         """The flat-engine step: same algorithm semantics, (n, T, 128) state.
@@ -493,14 +652,20 @@ class MultiLearnerTrainer:
                                           w.shape)
 
         elif algo.algo == "dpsgd":
+            mem = state.members
             losses, grads = jax.vmap(grad_fn)(w, stacked_batch)
             if self._fused is not None:
                 # the compiled schedule's per-step rounds: leading rounds
                 # run as mixing-only kernel passes (multi-round schedules —
                 # full-as-rounds, hierarchical, random_matching), the LAST
-                # round fuses the momentum-SGD update into the same pass
+                # round fuses the momentum-SGD update into the same pass.
+                # Elastic fleets swap in the membership-operand tables plus
+                # the kernel's active column (dead rows stay bitwise put).
                 from ..kernels import ops as kops
-                rounds = self._schedule.step_rounds(k_mix, state.step)
+                act = None if mem is None else mem.active
+                rounds = (self._schedule.step_rounds(k_mix, state.step)
+                          if mem is None
+                          else self._member_rounds(mem, k_mix, state.step))
                 g_upd, wd = grads, None
                 if len(rounds) > 1 and self._fused.weight_decay:
                     # weight decay regularizes the PRE-mix local weights
@@ -512,12 +677,31 @@ class MultiLearnerTrainer:
                     g_upd = grads + self._fused.weight_decay * w
                     wd = 0.0
                 for partners, coefs in rounds[:-1]:
-                    w = kops.flat_gossip_mix(w, partners, coefs,
+                    w = kops.flat_gossip_mix(w, partners, coefs, active=act,
                                              backend=self.kernel_backend)
                 partners, coefs = rounds[-1]
-                new_params, opt_state = self._fused_step(
+                new_params, opt_state_new = self._fused_step(
                     w, w, g_upd, state.opt_state, partners, coefs,
-                    weight_decay=wd)
+                    active=act, weight_decay=wd)
+                opt_state = (opt_state_new if mem is None else
+                             self._select_nonflat(act, opt_state_new,
+                                                  state.opt_state))
+            elif mem is not None:
+                act = mem.active
+                rounds = ([] if self._schedule is None
+                          else self._member_rounds(mem, k_mix, state.step))
+                if algo.gossip_order == "mix_then_descend":
+                    mixed = self._mix_member_rounds(w, rounds, act)
+                    updates, opt_state_new = self._opt_update(
+                        grads, state.opt_state, w, mixed)
+                    stepped = apply_updates(mixed, updates)
+                else:                                   # descend_then_mix
+                    updates, opt_state_new = self._opt_update(
+                        grads, state.opt_state, w, w)
+                    stepped = self._mix_member_rounds(
+                        apply_updates(w, updates), rounds, act)
+                new_params = jnp.where(act[:, None, None], stepped, w)
+                opt_state = _select(act, opt_state_new, state.opt_state)
             elif algo.gossip_order == "mix_then_descend":
                 mixed = self._mix_sched(w, k_mix, state.step)
                 updates, opt_state = self._opt_update(grads, state.opt_state,
@@ -530,10 +714,21 @@ class MultiLearnerTrainer:
                                              k_mix, state.step)
 
         elif algo.algo == "adpsgd":
-            active = straggler_active_mask(state.step, n, algo.slow_learner,
-                                           algo.slow_factor)
-            fresh = age >= algo.max_staleness
-            stale_seen = jnp.where(fresh, 0, age)
+            mem = state.members
+            if mem is None:
+                active = straggler_active_mask(state.step, n,
+                                               algo.slow_learner,
+                                               algo.slow_factor)
+                fresh = age >= algo.max_staleness
+                stale_seen = jnp.where(fresh, 0, age)
+            else:
+                # elastic: liveness AND the per-learner tick divisor gate
+                # the step; a dead learner can neither step nor be forced
+                # to publish stale quarantined rows
+                active = member_active_mask(state.step, mem.active,
+                                            mem.slow_every)
+                fresh = (age >= algo.max_staleness) & mem.active
+                stale_seen = jnp.where(fresh | ~mem.active, 0, age)
             stale_mean = jnp.mean(stale_seen.astype(jnp.float32))
             stale_max = jnp.max(stale_seen).astype(jnp.float32)
 
@@ -542,9 +737,15 @@ class MultiLearnerTrainer:
                 # the matching + solo-aware coefs come from the compiled
                 # schedule — ONE source of truth with the DPSGD fused path
                 # (the round-0 draw is the raw-key pair_partners, so the
-                # bitwise sync==async(tau=0) contract is table-for-table)
-                (partners, coefs), = self._schedule.step_rounds(k_mix,
-                                                                state.step)
+                # bitwise sync==async(tau=0) contract is table-for-table).
+                # Elastic fleets draw the only-active matching from the
+                # membership mask instead.
+                if mem is None:
+                    (partners, coefs), = self._schedule.step_rounds(
+                        k_mix, state.step)
+                else:
+                    (partners, coefs), = self._member_rounds(mem, k_mix,
+                                                             state.step)
                 partner = partners[0]
                 # publish-mode kernel: stale-remote select, straggler select
                 # AND the published-buffer rewrite all happen in the one
@@ -557,7 +758,11 @@ class MultiLearnerTrainer:
                 opt_state = self._select_nonflat(active, opt_state_new,
                                                  state.opt_state)
             else:
-                partner = pair_partners(k_mix, n)
+                if mem is None:
+                    partner = pair_partners(k_mix, n)
+                else:
+                    partner = topo.masked_pair_partners(
+                        k_mix, mem.active, drop=mem.drop_round)
                 remote = jnp.where(fresh[:, None, None], w, buffer)
                 mixed = mix_pair_gather(w, partner, remote)
                 updates, opt_state_new = self._opt_update(
@@ -573,21 +778,41 @@ class MultiLearnerTrainer:
             raise ValueError(f"flat engine does not run {algo.algo}; "
                              "use engine='pytree'")
 
-        g_mean = jnp.mean(grads, axis=0)
+        mem = state.members
         # centered two-pass variance on the single flat buffer: same value
         # as the per-leaf learner_var (pads contribute exactly 0) at about
         # half jnp.var's cost, and numerically safe at consensus (the
         # E[x^2]-E[x]^2 shortcut is NOT — it cancels catastrophically there)
-        dev = new_params - jnp.mean(new_params, axis=0)
+        gsq = jnp.sum(jnp.square(grads), axis=(1, 2))
+        if mem is None:
+            nact = jnp.float32(n)
+            loss = jnp.mean(losses)
+            g_mean = jnp.mean(grads, axis=0)
+            gsq_mean = jnp.mean(gsq)
+            dev = new_params - jnp.mean(new_params, axis=0)
+            sigma = jnp.sum(jnp.square(dev)) / n
+        else:        # active-only statistics: quarantined rows are excluded
+            act = mem.active
+            nact = jnp.maximum(jnp.sum(act), 1).astype(jnp.float32)
+            m3 = act[:, None, None]
+            loss = jnp.sum(jnp.where(act, losses, 0.0)) / nact
+            g_mean = jnp.sum(jnp.where(m3, grads, 0.0), axis=0) / nact
+            gsq_mean = jnp.sum(jnp.where(act, gsq, 0.0)) / nact
+            w_mean = jnp.sum(jnp.where(m3, new_params, 0.0), axis=0) / nact
+            dev = jnp.where(m3, new_params - w_mean[None], 0.0)
+            sigma = jnp.sum(jnp.square(dev)) / nact
         metrics = StepMetrics(
-            loss=jnp.mean(losses),
+            loss=loss,
             grad_norm=jnp.sqrt(jnp.sum(jnp.square(g_mean))),
-            sigma_w_sq=jnp.sum(jnp.square(dev)) / n,
+            sigma_w_sq=sigma,
             staleness_mean=stale_mean,
             staleness_max=stale_max,
+            n_active=nact,
+            grad_sq_mean=gsq_mean,
         )
         return TrainState(new_params, opt_state, state.step + 1, state.rng,
-                          buffer=buffer, age=age, clock=clock), metrics
+                          buffer=buffer, age=age, clock=clock,
+                          members=state.members), metrics
 
     # -- multi-step scan driver (DESIGN §11) ----------------------------------
     def _run_steps(self, state: TrainState, stacked_batches):

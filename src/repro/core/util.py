@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["tree_dot", "tree_norm_sq", "tree_add", "tree_sub", "tree_scale",
-           "learner_mean", "learner_var", "tree_zeros_like", "tree_gaussian_like",
+           "learner_mean", "learner_var", "masked_learner_mean",
+           "masked_learner_var", "tree_zeros_like", "tree_gaussian_like",
            "global_norm"]
 
 
@@ -57,4 +58,38 @@ def learner_var(stacked):
     learner weights around their mean (the paper's weight-variance instrument)."""
     leaves = jax.tree_util.tree_map(
         lambda x: jnp.sum(jnp.var(x.astype(jnp.float32), axis=0)), stacked)
+    return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))
+
+
+def _mask_for(active, x):
+    return jnp.asarray(active, bool).reshape((-1,) + (1,) * (x.ndim - 1))
+
+
+def masked_learner_mean(stacked, active):
+    """Consensus mean over the ACTIVE learners only (elastic membership).
+
+    ``active``: (n,) bool.  Dead/evicted learners' quarantined rows are
+    excluded with ``where`` (never multiplied), so an arbitrary — even
+    non-finite — parked row cannot bleed into the consensus (DESIGN §15).
+    """
+    denom = jnp.maximum(jnp.sum(jnp.asarray(active, bool)), 1)
+
+    def _mean(x):
+        s = jnp.sum(jnp.where(_mask_for(active, x),
+                              x.astype(jnp.float32), 0.0), axis=0)
+        return (s / denom).astype(x.dtype)
+    return jax.tree_util.tree_map(_mean, stacked)
+
+
+def masked_learner_var(stacked, active):
+    """sigma_w^2 over the ACTIVE learners only (see masked_learner_mean)."""
+    denom = jnp.maximum(jnp.sum(jnp.asarray(active, bool)), 1)
+
+    def _var(x):
+        m = _mask_for(active, x)
+        xf = jnp.where(m, x.astype(jnp.float32), 0.0)
+        mean = jnp.sum(xf, axis=0) / denom
+        dev = jnp.where(m, xf - mean[None], 0.0)
+        return jnp.sum(jnp.square(dev)) / denom
+    leaves = jax.tree_util.tree_map(_var, stacked)
     return jax.tree_util.tree_reduce(jnp.add, leaves, jnp.float32(0.0))

@@ -156,7 +156,8 @@ def flat_gossip_update(w, remote, grads, momentum, partners, coefs, *,
     return w_new, mu_new
 
 
-def flat_gossip_mix(w, partners, coefs, *, backend: str = "auto"):
+def flat_gossip_mix(w, partners, coefs, *, active=None,
+                    backend: str = "auto"):
     """One mixing-only gossip round on the flat (n, T, 128) store.
 
     ``partners``: (K, n) int32; ``coefs``: (n, K + 1) f32 ``[self,
@@ -168,10 +169,17 @@ def flat_gossip_mix(w, partners, coefs, *, backend: str = "auto"):
     and ``w`` aliased as the (ignored) gradient operand, so arbitrary
     static K rides the same scalar-prefetch hot path with no second kernel
     to maintain.
+
+    ``active`` ((n,) bool, elastic membership): inactive rows are left
+    bitwise untouched by the kernel's in-pass select — a quarantined row
+    holding arbitrary (even non-finite) values neither moves nor, given
+    only-active partner tables, bleeds into live rows.
     """
     n = w.shape[0]
-    pad = jnp.ones((n, 2), jnp.float32)          # [lr scale, active] = 1
-    full = jnp.concatenate([coefs.astype(jnp.float32), pad], axis=1)
+    act = (jnp.ones((n, 1), jnp.float32) if active is None
+           else active.astype(jnp.float32)[:, None])
+    pad = jnp.ones((n, 1), jnp.float32)          # lr scale (ignored: lr=0)
+    full = jnp.concatenate([coefs.astype(jnp.float32), pad, act], axis=1)
     out = flat_gossip_update(w, w, w, None, partners, full, lr=0.0,
                              backend=backend)
     return out[0]

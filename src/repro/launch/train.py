@@ -35,7 +35,7 @@ try:                                      # jax >= 0.6
 except AttributeError:                    # jax 0.4.x
     from jax.experimental.shard_map import shard_map as _shard_map
 
-from ..core.dpsgd import (mix_einsum, mix_ppermute_pair,
+from ..core.dpsgd import (member_active_mask, mix_einsum, mix_ppermute_pair,
                           mix_ppermute_pair_flat, mix_ppermute_ring,
                           mix_ppermute_ring_flat, mix_ppermute_schedule,
                           mix_ppermute_schedule_flat, straggler_active_mask)
@@ -68,6 +68,20 @@ class PjitTrainState(NamedTuple):
     # -- adpsgd only (None otherwise) --------------------------------------
     buffer: Any = None    # last-published weights, stacked like params
     age: Any = None       # (L,) int32 ticks since each learner published
+    # -- elastic membership operands (None for a static fleet; DESIGN §15) --
+    active: Any = None       # (L,) bool — live fleet members
+    slow_every: Any = None   # (L,) int32 — completes a step every k ticks
+    drop_round: Any = None   # () bool — this tick's gossip round is dropped
+
+
+def membership_operands(membership, drop_round: bool = False) -> dict:
+    """The launch-layer half of ``MultiLearnerTrainer.set_membership``:
+    device operands for a host-side ``core.membership.Membership``, to be
+    swapped in between steps with ``state._replace(**...)`` — same shapes,
+    so the compiled step is never invalidated."""
+    return dict(active=jnp.asarray(membership.active),
+                slow_every=jnp.asarray(membership.slow_every, jnp.int32),
+                drop_round=jnp.asarray(bool(drop_round)))
 
 
 # ---------------------------------------------------------------------------
@@ -165,7 +179,8 @@ def make_dpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh,
 def make_adpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh, *,
                            max_staleness: int = 4, slow_learner: int = -1,
                            slow_factor: int = 1,
-                           gossip_fuse: str = "flat") -> Callable:
+                           gossip_fuse: str = "flat",
+                           elastic: bool = False) -> Callable:
     """One asynchronous-gossip tick as an SPMD program (DESIGN §3).
 
     Same simulation contract as the vmap research path: each learner mixes
@@ -174,6 +189,15 @@ def make_adpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh, *,
     by up to ``max_staleness`` ticks, and an injected straggler only
     completes (and publishes) every ``slow_factor`` ticks.  With
     ``max_staleness=0`` and no straggler this is synchronous pairwise DPSGD.
+
+    ``elastic=True`` (DESIGN §15): the state carries membership OPERANDS
+    (``active``/``slow_every``/``drop_round`` — see
+    :func:`membership_operands`); liveness and per-learner tick divisors
+    replace the single static straggler, a hypercube pair mixes only when
+    both endpoints are live (the gate ppermutes alongside the buffer), a
+    dead learner's rows stay quarantined bitwise, and the loss averages
+    the active learners only.  A membership change is a same-shape operand
+    swap — no retrace.
     """
     L = n_learners(mesh)
     l_axes = learner_axes(mesh)
@@ -183,26 +207,39 @@ def make_adpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh, *,
         raise ValueError("optimizer assumes a static mixing matrix but "
                          "AD-PSGD gossips over a time-varying pairwise "
                          "schedule (see optim/decentlam.py)")
+    if elastic and getattr(optimizer, "wants_mixed", False):
+        raise ValueError("a mixing-matrix-corrected optimizer (decentlam) "
+                         "assumes a static fleet (see core/trainer.py)")
 
-    def gossip(params, buffer, age, step):
+    def gossip(params, buffer, age, step, act, drop):
         specs = shd.params_sharding(params, mesh, stacked=True)
         age_spec = P(tuple(l_axes))
 
-        def local(p, buf, a):
+        def local(p, buf, a, *rest):
             fresh = a[0] >= max_staleness          # forced publish (bound)
             remote = jax.tree_util.tree_map(
                 lambda w, b: jnp.where(fresh, w, b), p, buf)
+            gate = None
+            if rest:    # elastic: liveness x not-dropped gates the mix
+                gate = (rest[0][0].astype(jnp.float32)
+                        * (1.0 - rest[1].astype(jnp.float32)))
             if gossip_fuse == "flat":
-                return mix_ppermute_pair_flat(p, l_axes, step, remote=remote)
-            return mix_ppermute_pair(p, l_axes, step, remote=remote)
+                return mix_ppermute_pair_flat(p, l_axes, step, remote=remote,
+                                              gate=gate)
+            return mix_ppermute_pair(p, l_axes, step, remote=remote,
+                                     gate=gate)
 
+        in_specs = (specs, specs, age_spec)
+        args = (params, buffer, age)
+        if act is not None:
+            in_specs += (age_spec, P())
+            args += (act, drop)
         # check_rep: see make_dpsgd_train_step — the flat view breaks static
         # replication inference, not actual replication
         return _shard_map(local, mesh=mesh,
-                             in_specs=(specs, specs, age_spec),
+                             in_specs=in_specs,
                              out_specs=specs,
-                             check_rep=gossip_fuse != "flat")(params, buffer,
-                                                              age)
+                             check_rep=gossip_fuse != "flat")(*args)
 
     def train_step(state: PjitTrainState, batch):
         stacked_batch = jax.tree_util.tree_map(
@@ -212,7 +249,18 @@ def make_adpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh, *,
                                      in_axes=(0, 0),
                                      spmd_axis_name=l_axes)(
                 state.params, stacked_batch)
-        mixed = gossip(state.params, state.buffer, state.age, state.step)
+        if elastic:
+            live = state.active
+            active = member_active_mask(state.step, live, state.slow_every)
+            fresh = (state.age >= max_staleness) & live
+            mixed = gossip(state.params, state.buffer, state.age, state.step,
+                           live, state.drop_round)
+        else:
+            active = straggler_active_mask(state.step, L, slow_learner,
+                                           slow_factor)
+            fresh = state.age >= max_staleness
+            mixed = gossip(state.params, state.buffer, state.age, state.step,
+                           None, None)
         if getattr(optimizer, "wants_mixed", False):   # decentlam correction
             updates, opt_state_new = jax.vmap(optimizer.update)(
                 grads, state.opt_state, state.params, mixed)
@@ -220,10 +268,6 @@ def make_adpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh, *,
             updates, opt_state_new = jax.vmap(optimizer.update)(
                 grads, state.opt_state, state.params)
         stepped = apply_updates(mixed, updates)
-
-        active = straggler_active_mask(state.step, L, slow_learner,
-                                       slow_factor)
-        fresh = state.age >= max_staleness
 
         def sel(mask):
             return lambda a, b: jnp.where(
@@ -237,10 +281,21 @@ def make_adpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh, *,
         buffer = jax.tree_util.tree_map(sel(active | fresh), new_params,
                                         state.buffer)
         age = jnp.where(active | fresh, 0, state.age + 1)
-        metrics = {"loss": jnp.mean(losses),
-                   "staleness_max": jnp.max(jnp.where(fresh, 0, state.age))}
+        if elastic:
+            nact = jnp.maximum(jnp.sum(state.active), 1).astype(jnp.float32)
+            loss = jnp.sum(jnp.where(state.active, losses, 0.0)) / nact
+            metrics = {"loss": loss, "n_active": nact,
+                       "staleness_max": jnp.max(jnp.where(
+                           fresh | ~state.active, 0, state.age))}
+        else:
+            metrics = {"loss": jnp.mean(losses),
+                       "staleness_max": jnp.max(jnp.where(fresh, 0,
+                                                          state.age))}
         return PjitTrainState(new_params, opt_state, state.step + 1,
-                              state.rng, buffer=buffer, age=age), metrics
+                              state.rng, buffer=buffer, age=age,
+                              active=state.active,
+                              slow_every=state.slow_every,
+                              drop_round=state.drop_round), metrics
 
     return train_step
 
@@ -326,15 +381,20 @@ def stacked_param_specs(api: ModelAPI, L: int):
 
 
 def train_state_specs(api: ModelAPI, optimizer: Optimizer, mesh, *,
-                      algo: str):
+                      algo: str, elastic: bool = False):
     L = n_learners(mesh)
     buffer = age = None
+    active = slow_every = drop_round = None
     if algo in ("dpsgd", "adpsgd"):
         p = stacked_param_specs(api, L)
         o = jax.eval_shape(lambda q: jax.vmap(optimizer.init)(q), p)
         if algo == "adpsgd":
             buffer = p
             age = jax.ShapeDtypeStruct((L,), jnp.int32)
+        if elastic:
+            active = jax.ShapeDtypeStruct((L,), jnp.bool_)
+            slow_every = jax.ShapeDtypeStruct((L,), jnp.int32)
+            drop_round = jax.ShapeDtypeStruct((), jnp.bool_)
     else:
         p = jax.eval_shape(api.init, jax.random.PRNGKey(0))
         o = jax.eval_shape(optimizer.init, p)
@@ -342,7 +402,8 @@ def train_state_specs(api: ModelAPI, optimizer: Optimizer, mesh, *,
         params=p, opt_state=o,
         step=jax.ShapeDtypeStruct((), jnp.int32),
         rng=jax.ShapeDtypeStruct((2,), jnp.uint32),
-        buffer=buffer, age=age)
+        buffer=buffer, age=age, active=active, slow_every=slow_every,
+        drop_round=drop_round)
 
 
 def train_state_shardings(state_specs: PjitTrainState, mesh, *, algo: str):
@@ -360,8 +421,14 @@ def train_state_shardings(state_specs: PjitTrainState, mesh, *, algo: str):
     o = jax.tree_util.tree_unflatten(
         treedef, [opt_spec(pa, l) for pa, l in flat])
     buffer = age = None
+    active = slow_every = drop_round = None
     if algo == "adpsgd":
         buffer = p
         age = P(learner_axes(mesh))
+    if state_specs.active is not None:   # elastic membership operands
+        active = P(learner_axes(mesh))
+        slow_every = P(learner_axes(mesh))
+        drop_round = P()
     return PjitTrainState(params=p, opt_state=o, step=P(), rng=P(),
-                          buffer=buffer, age=age)
+                          buffer=buffer, age=age, active=active,
+                          slow_every=slow_every, drop_round=drop_round)

@@ -14,12 +14,13 @@ from .sgd import sgd
 from .adam import adam
 from .lamb import lamb
 from .decentlam import decentlam
+from .adascale import AdaScale, AdaScaleAutoLR
 from .schedules import (constant_schedule, controller_scale, linear_warmup,
                         scale_by_controller, set_controller_scale, step_decay,
                         warmup_linear_scale)
 
 __all__ = ["FusedSGD", "Optimizer", "apply_updates", "sgd", "adam", "lamb",
-           "decentlam",
+           "decentlam", "AdaScale", "AdaScaleAutoLR",
            "constant_schedule", "linear_warmup", "step_decay",
            "warmup_linear_scale", "scale_by_schedule", "scale_by_controller",
            "set_controller_scale", "controller_scale"]

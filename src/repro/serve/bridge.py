@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.util import learner_var
+from ..core.util import (learner_var, masked_learner_mean,
+                         masked_learner_var)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,10 +38,17 @@ class ConsensusSnapshot:
     params: Any               # consensus mean, single-learner pytree
     step: int                 # trainer step the snapshot was taken at
     consensus_dist: float     # sigma_w = sqrt(sigma_w^2) at snapshot time
+    n_active: int = 0         # live learners averaged into the mean
 
 
 class ConsensusBridge:
-    """Snapshot the consensus mean out of a live trainer for serving."""
+    """Snapshot the consensus mean out of a live trainer for serving.
+
+    Membership-aware: an elastic state (``state.members`` set) averages
+    only the ACTIVE learners — a crashed learner's quarantined row is
+    frozen at its time-of-death weights (or worse), and folding it into
+    the served mean would silently degrade every response (DESIGN §15).
+    """
 
     def __init__(self, trainer):
         self.trainer = trainer
@@ -48,21 +56,38 @@ class ConsensusBridge:
     def _stacked(self, state):
         return self.trainer.params_tree(state)
 
+    @staticmethod
+    def _active(state):
+        members = getattr(state, "members", None)
+        return None if members is None else members.active
+
     def snapshot(self, state) -> ConsensusSnapshot:
         stacked = self._stacked(state)
-        mean = jax.tree_util.tree_map(
-            lambda x: jnp.mean(x.astype(jnp.float32), axis=0), stacked)
-        dist = float(jnp.sqrt(learner_var(stacked)))
+        act = self._active(state)
+        if act is None:
+            mean = jax.tree_util.tree_map(
+                lambda x: jnp.mean(x.astype(jnp.float32), axis=0), stacked)
+            dist = float(jnp.sqrt(learner_var(stacked)))
+            n_act = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+        else:
+            mean = jax.tree_util.tree_map(
+                lambda x: x.astype(jnp.float32),
+                masked_learner_mean(stacked, act))
+            dist = float(jnp.sqrt(masked_learner_var(stacked, act)))
+            n_act = int(jnp.sum(act))
         return ConsensusSnapshot(params=mean, step=int(state.step),
-                                 consensus_dist=dist)
+                                 consensus_dist=dist, n_active=int(n_act))
 
     def staleness(self, state, snap: ConsensusSnapshot) -> Dict[str, float]:
         """How far the live trainer has moved past a served snapshot."""
         stacked = self._stacked(state)
+        act = self._active(state)
+        now = (learner_var(stacked) if act is None
+               else masked_learner_var(stacked, act))
         return {
             "steps_behind": int(state.step) - snap.step,
             "consensus_dist_snapshot": snap.consensus_dist,
-            "consensus_dist_now": float(jnp.sqrt(learner_var(stacked))),
+            "consensus_dist_now": float(jnp.sqrt(now)),
         }
 
 

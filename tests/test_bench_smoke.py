@@ -32,6 +32,7 @@ WORKLOADS = (
     "ablation_topology",
     "bench_kernels",
     "bench_throughput",
+    "faults",
     "roofline_report",
     "serving",
     "matrix",
@@ -70,7 +71,8 @@ def test_workload_survives_smoke(name, bench_tmp_results, capsys):
     # bench_kernels prints per-kernel rows: bench_kernel_<name>;
     # serving's summary row matches its results table (bench_serving.csv)
     stem = {"bench_kernels": "bench_kernel",
-            "serving": "bench_serving"}.get(name, name)
+            "serving": "bench_serving",
+            "faults": "bench_faults"}.get(name, name)
     assert any(line.startswith(stem) for line in out.splitlines()), (
         f"{name} --smoke printed no `{stem},us,derived` contract row:\n"
         f"{out}")

@@ -1,0 +1,327 @@
+"""Fault-injection harness contracts (DESIGN §15).
+
+  * FaultPlan — deterministic under a seed, sorted, floor on live count;
+  * apply_plan — the shared injection path: event semantics, rejoin
+    surgery ordering, drop-round signalling;
+  * Supervisor — scripted crash/rejoin/slow/drop scenarios drive a real
+    trainer to finite losses; a transiently wedged learner is recovered
+    through the retry ladder, a sticky (recovery-proof) hang is evicted
+    after bounded retries with doubling backoff;
+  * AdaScale — gain stays in [1, n_active], degenerates correctly at the
+    consensus and pure-noise extremes, and composed with AutoLR the
+    emitted multiplier keeps alpha_eff * lambda_max <= rho < 2 across a
+    fleet resize;
+  * crash-safe checkpoints — a kill mid-write leaves no visible partial
+    file; restore falls back past truncated/bit-flipped checkpoints and
+    refuses an explicitly-requested corrupt step.
+"""
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              save_checkpoint, verify_checkpoint)
+from repro.core import (AlgoConfig, FaultEvent, FaultPlan, Membership,
+                        MultiLearnerTrainer, Supervisor)
+from repro.core.faults import apply_plan
+from repro.core.membership import HUNG
+from repro.data import ShardedLoader, TemplateImages
+from repro.landscape import AutoLRController
+from repro.landscape.probe import ProbeResult
+from repro.models import fcnet
+from repro.optim import AdaScale, AdaScaleAutoLR, sgd
+
+N = 5
+LOADER = ShardedLoader(TemplateImages(), n_learners=N, local_batch=32,
+                       seed=0)
+PARAMS = fcnet.init_params(jax.random.PRNGKey(0), in_dim=784, hidden=50)
+
+
+def _trainer(algo="dpsgd", engine="flat", **kw):
+    if algo == "adpsgd":
+        kw.setdefault("max_staleness", 4)
+    return MultiLearnerTrainer(
+        fcnet.loss_fn, sgd(0.1, momentum=0.9),
+        AlgoConfig(algo=algo, topology="random_pair", n_learners=N,
+                   noise_std=0.0, **kw),
+        engine=engine)
+
+
+def _elastic_state(tr, seed=1):
+    mem = Membership(N)
+    st = tr.set_membership(tr.init(jax.random.PRNGKey(seed), PARAMS), mem)
+    return st, mem
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_plan_events_sorted_and_queryable():
+    plan = FaultPlan((FaultEvent(9, "crash", 1), FaultEvent(2, "slow", 0, 3),
+                      FaultEvent(9, "drop_round")))
+    assert [e.step for e in plan.events] == [2, 9, 9]
+    assert plan.last_step == 9
+    assert {e.kind for e in plan.at(9)} == {"crash", "drop_round"}
+    assert plan.at(5) == []
+
+
+def test_plan_rejects_unknown_kind():
+    with pytest.raises(AssertionError):
+        FaultPlan((FaultEvent(0, "explode", 0),))
+
+
+def test_random_plan_is_seed_deterministic():
+    a = FaultPlan.random(7, steps=200, capacity=8)
+    b = FaultPlan.random(7, steps=200, capacity=8)
+    c = FaultPlan.random(8, steps=200, capacity=8)
+    assert a.events == b.events
+    assert a.events != c.events
+    assert a.events   # 200 steps of default rates produce SOME faults
+
+
+def test_random_plan_respects_min_active_floor():
+    plan = FaultPlan.random(3, steps=500, capacity=4, p_crash=0.5,
+                            p_rejoin=0.05, min_active=2)
+    active = np.ones(4, bool)
+    for ev in plan.events:
+        if ev.kind == "crash":
+            active[ev.learner] = False
+        elif ev.kind == "rejoin":
+            active[ev.learner] = True
+        assert active.sum() >= 2, ev
+
+
+def test_apply_plan_semantics_and_rejoin_ordering():
+    mem = Membership(4)
+    seen = []
+    plan = FaultPlan((
+        FaultEvent(0, "crash", 2), FaultEvent(0, "slow", 1, 3),
+        FaultEvent(1, "rejoin", 2), FaultEvent(1, "drop_round"),
+        FaultEvent(2, "hang", 0, True), FaultEvent(3, "recover", 0)))
+    sticky = set()
+    assert apply_plan(mem, plan, 0, sticky=sticky) is False
+    assert not mem.active[2] and mem.slow_every[1] == 3
+
+    # on_rejoin must observe the PRE-flip mask (admit clones live consensus)
+    drop = apply_plan(mem, plan, 1, sticky=sticky,
+                      on_rejoin=lambda s: seen.append(
+                          (s, mem.active.copy())))
+    assert drop is True
+    assert seen[0][0] == 2 and not seen[0][1][2]   # still dead when called
+    assert mem.active[2] and mem.incarnation[2] == 1
+
+    apply_plan(mem, plan, 2, sticky=sticky)
+    assert mem.slow_every[0] == HUNG and sticky == {0}
+    apply_plan(mem, plan, 3, sticky=sticky)
+    assert mem.slow_every[0] == 1 and sticky == set()
+
+
+# ---------------------------------------------------------------------------
+# Supervisor scenarios on the real trainer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo,engine", [("dpsgd", "flat"),
+                                         ("dpsgd", "pytree"),
+                                         ("adpsgd", "flat")])
+def test_supervised_crash_rejoin_run(algo, engine):
+    tr = _trainer(algo, engine)
+    st, mem = _elastic_state(tr)
+    plan = FaultPlan(FaultPlan.crash_rejoin(1, 3, 7).events
+                     + (FaultEvent(5, "drop_round"),
+                        FaultEvent(0, "slow", 0, 2)))
+    sup = Supervisor(tr, mem, plan)
+    st, losses = sup.run(st, LOADER.batch, steps=10)
+    assert all(np.isfinite(losses))
+    assert sup.report.crashes == [(3, 1)]
+    assert sup.report.rejoins == [(7, 1)]
+    assert sup.report.dropped_rounds == 1
+    assert sup.report.evictions == []
+    assert mem.n_active == N
+
+
+@pytest.mark.parametrize("algo", ["dpsgd", "adpsgd"])
+def test_supervisor_evicts_sticky_hang_after_backoff(algo):
+    tr = _trainer(algo)
+    st, mem = _elastic_state(tr)
+    plan = FaultPlan((FaultEvent(0, "hang", 2, True),))   # recovery-proof
+    sup = Supervisor(tr, mem, plan, staleness_bound=1, grace=1,
+                     max_retries=2)
+    st, losses = sup.run(st, LOADER.batch, steps=20)
+    assert all(np.isfinite(losses))
+    # retry ladder: thresholds 1, 2, 4 ticks -> two retries then eviction
+    assert [s for s, i in sup.report.retries if i == 2]
+    assert len([1 for s, i in sup.report.retries if i == 2]) == 2
+    assert [i for _, i in sup.report.evictions] == [2]
+    assert not mem.active[2] and mem.n_active == N - 1
+
+
+def test_supervisor_recovers_transient_hang():
+    tr = _trainer("dpsgd")
+    st, mem = _elastic_state(tr)
+    plan = FaultPlan((FaultEvent(0, "hang", 1),))         # transient wedge
+    sup = Supervisor(tr, mem, plan, staleness_bound=1, grace=1,
+                     max_retries=3)
+    st, losses = sup.run(st, LOADER.batch, steps=12)
+    assert all(np.isfinite(losses))
+    assert [i for _, i in sup.report.retries][:1] == [1]  # retried...
+    assert sup.report.evictions == []                     # ...not evicted
+    assert mem.active[1] and mem.slow_every[1] == 1       # and healthy again
+
+
+def test_supervised_chaos_run_stays_finite():
+    tr = _trainer("dpsgd")
+    st, mem = _elastic_state(tr)
+    plan = FaultPlan.random(0, steps=15, capacity=N, min_active=2)
+    sup = Supervisor(tr, mem, plan)
+    st, losses = sup.run(st, LOADER.batch, steps=15)
+    assert all(np.isfinite(losses))
+    assert mem.n_active >= 2
+
+
+# ---------------------------------------------------------------------------
+# AdaScale gain + AutoLR clamp composition
+# ---------------------------------------------------------------------------
+
+def test_adascale_gain_bounds_and_extremes():
+    n = 8.0
+    # exact consensus: every learner's gradient identical -> gain == 1
+    ada = AdaScale(theta=0.0)
+    assert ada.update(grad_sq_mean=4.0, grad_norm_sq=4.0, n_active=n) == 1.0
+    # pure noise: mean gradient ~ 0 -> gain -> n (clamped at n)
+    ada = AdaScale(theta=0.0)
+    g = ada.update(grad_sq_mean=4.0, grad_norm_sq=4.0 / n, n_active=n)
+    assert g == pytest.approx(n, rel=0.2) and g <= n
+    # mixed regime stays inside [1, n] for arbitrary inputs
+    ada = AdaScale(theta=0.5)
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        m2 = float(rng.uniform(0, 10))
+        mb = float(rng.uniform(0, 10))
+        nact = float(rng.integers(1, 9))
+        g = ada.update(m2, mb, nact)
+        assert 1.0 <= g <= 8.0
+    # NaN metrics hold the last gain instead of poisoning it
+    before = ada.gain
+    assert ada.update(float("nan"), 1.0, 4.0) == before
+    ada.reset_smoothing()
+    assert ada.sigma_sq is None and ada.mu_sq is None
+
+
+def test_adascale_single_survivor_gain_is_one():
+    ada = AdaScale(theta=0.0)
+    assert ada.update(5.0, 1.0, n_active=1.0) == 1.0
+
+
+def _probe(sharpness):
+    z = jnp.float32(0.0)
+    return ProbeResult(sharpness=jnp.float32(sharpness), trace_h=z,
+                       trace_hc=z, sigma_w_sq=z, grad_norm=jnp.float32(1.0),
+                       gns=z, alpha_e_pred=z)
+
+
+class _Metrics:
+    def __init__(self, m2, gn, n):
+        self.grad_sq_mean, self.grad_norm, self.n_active = m2, gn, n
+
+
+def test_adascale_autolr_clamp_binds_across_resize():
+    alpha0 = 0.5
+    ctl = AutoLRController(alpha0=alpha0, rho=1.8, max_scale=8.0, ema=0.0)
+    comp = AdaScaleAutoLR(ctl, AdaScale(theta=0.0))
+    lam = 10.0
+    comp.on_probe(_probe(lam))
+    # a grown fleet in the noise-dominated regime asks for a big gain...
+    n = 8.0
+    scale = comp.on_metrics(_Metrics(4.0, np.sqrt(4.0 / n), n))
+    # ...but the stability edge binds: alpha_eff * lambda <= rho < 2
+    assert scale * alpha0 * lam <= 1.8 + 1e-9
+    assert scale == pytest.approx(1.8 / (alpha0 * lam))
+    # resize down to consensus-dominated: gain collapses to ~1, clamp slack
+    comp.adascale.reset_smoothing()
+    scale2 = comp.on_metrics(_Metrics(4.0, 2.0, 2.0))
+    assert scale2 * alpha0 * lam <= 1.8 + 1e-9
+    assert comp.adascale.gain == 1.0
+    # max_gain cap is honored when the clamp is slack
+    comp2 = AdaScaleAutoLR(AutoLRController(alpha0=0.01, ema=0.0,
+                                            max_scale=100.0),
+                           AdaScale(theta=0.0), max_gain=2.0)
+    comp2.on_probe(_probe(1.0))
+    s = comp2.on_metrics(_Metrics(4.0, np.sqrt(4.0 / 8), 8.0))
+    assert s <= 2.0 * comp2.autolr.scale + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# crash-safe checkpoints
+# ---------------------------------------------------------------------------
+
+TREE = {"w": jnp.arange(12.0).reshape(3, 4), "t": jnp.int32(7)}
+
+
+def test_kill_mid_write_leaves_no_visible_checkpoint(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, TREE)
+
+    # simulate the writer dying mid-write: np.savez raises after partial IO
+    class Bomb:
+        dtype = np.float32
+
+        def __array__(self):
+            raise KeyboardInterrupt("killed mid-serialize")
+
+    with pytest.raises(KeyboardInterrupt):
+        save_checkpoint(d, 2, {"w": Bomb()})
+    assert latest_step(d) == 1                       # step 2 never visible
+    assert not glob.glob(os.path.join(d, "*.tmp"))   # temp cleaned up
+    tree, step = restore_checkpoint(d, TREE)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["w"]),
+                                  np.asarray(TREE["w"]))
+
+
+def test_restore_falls_back_past_corrupt_latest(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 10, TREE)
+    path20 = save_checkpoint(d, 20, TREE)
+    # truncate the newest file: a torn write that somehow became visible
+    data = open(path20, "rb").read()
+    open(path20, "wb").write(data[:len(data) // 2])
+    assert not verify_checkpoint(d, 20)
+    assert verify_checkpoint(d, 10)
+    tree, step = restore_checkpoint(d, TREE)         # falls back, loudly
+    assert step == 10
+    with pytest.raises(ValueError, match="corrupt"):
+        restore_checkpoint(d, TREE, step=20)         # explicit is strict
+
+
+def test_restore_detects_bit_flip(tmp_path):
+    d = str(tmp_path)
+    path = save_checkpoint(d, 5, TREE)
+    blob = bytearray(open(path, "rb").read())
+    # flip a byte INSIDE the 'w' payload (the f32 value 5.0), not in inert
+    # zip padding — targeted disk damage the digest must catch
+    off = blob.find(np.float32(5.0).tobytes())
+    assert off > 0
+    blob[off] ^= 0xFF
+    open(path, "wb").write(bytes(blob))
+    assert not verify_checkpoint(d, 5)
+    with pytest.raises(FileNotFoundError, match="no uncorrupted"):
+        restore_checkpoint(d, TREE)
+
+
+def test_checkpoint_roundtrip_under_supervisor(tmp_path):
+    """A mid-run checkpoint of an elastic state restores bit-exactly."""
+    tr = _trainer("dpsgd")
+    st, mem = _elastic_state(tr)
+    sup = Supervisor(tr, mem, FaultPlan.crash_rejoin(1, 2))
+    st, _ = sup.run(st, LOADER.batch, steps=4)
+    ckpt = {"params": tr.params_tree(st), "step": st.step}
+    save_checkpoint(str(tmp_path), int(st.step), ckpt)
+    back, step = restore_checkpoint(str(tmp_path), ckpt)
+    for a, b in zip(jax.tree_util.tree_leaves(back["params"]),
+                    jax.tree_util.tree_leaves(ckpt["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -78,6 +78,55 @@ for algo, backend in [("dpsgd", "einsum"), ("dpsgd", "ppermute"),
             "step": int(state.step),
             "max_age_seen": max(ages)}
 
+# elastic membership on the launch path (DESIGN 15): gated hypercube
+# gossip + membership operands, driven by the SAME FaultPlan harness as
+# the vmap trainer — crash, straggle, drop a round, quarantine-rejoin
+import numpy as np
+from repro.core import FaultPlan, Membership
+from repro.core.faults import apply_plan
+from repro.launch.train import membership_operands
+
+mem = Membership(4)
+plan = FaultPlan(FaultPlan.crash_rejoin(1, 2, 6).events
+                 + FaultPlan.straggler(0, 3).events)
+estep = make_adpsgd_train_step(api, opt, mesh, max_staleness=4,
+                               elastic=True)
+key = jax.random.PRNGKey(2)
+params = jax.vmap(lambda k: api.init(k))(jax.random.split(key, 4))
+especs = train_state_specs(api, opt, mesh, algo="adpsgd", elastic=True)
+state = type(especs)(
+    params=params,
+    opt_state=jax.vmap(opt.init)(params),
+    step=jnp.zeros((), jnp.int32),
+    rng=jax.random.PRNGKey(3),
+    buffer=jax.tree_util.tree_map(jnp.copy, params),
+    age=jnp.zeros((4,), jnp.int32),
+    **membership_operands(mem))
+bspecs = api.train_batch_spec(8, 64)
+batch = jax.tree_util.tree_map(lambda s: jnp.zeros(s.shape, s.dtype), bspecs)
+leaf0 = lambda p: jax.tree_util.tree_leaves(p)[0]
+dead_row, frozen, n_act, losses_fin = None, False, [], []
+with mesh:
+    erun = jit_train_step(estep)
+    for i in range(8):
+        drop = apply_plan(mem, plan, i)
+        state = state._replace(**membership_operands(mem, drop_round=drop))
+        state, metrics = erun(state, batch)
+        n_act.append(int(metrics["n_active"]))
+        losses_fin.append(bool(jnp.isfinite(metrics["loss"])))
+        if i == 2:
+            dead_row = np.asarray(leaf0(state.params)[1])
+        if i == 5:
+            frozen = bool(
+                (np.asarray(leaf0(state.params)[1]) == dead_row).all())
+try:
+    cache = int(erun._cache_size())
+except Exception:
+    cache = 1
+out["elastic_exec"] = {"losses_finite": all(losses_fin),
+                       "n_active": n_act, "dead_row_frozen": frozen,
+                       "cache_size": cache, "step": int(state.step)}
+
 # decode lowering
 params_specs = jax.eval_shape(api.init, jax.random.PRNGKey(0))
 params_shd = shd.params_sharding(params_specs, mesh, stacked=False)
@@ -144,3 +193,20 @@ def test_adpsgd_trains_under_pjit(launch_results):
 
 def test_ssgd_has_gradient_allreduce(launch_results):
     assert launch_results["ssgd_einsum"].get("all-reduce", 0) > 0
+
+
+def test_elastic_membership_on_launch_path(launch_results):
+    """Crash/straggle/drop/rejoin via FaultPlan on the pjit path: losses
+    stay finite, the live count tracks the plan, the crashed learner's
+    rows are bitwise-frozen while dead, and every membership change is a
+    same-shape operand swap (ONE compiled step for the whole run)."""
+    ex = launch_results["elastic_exec"]
+    assert ex["losses_finite"]
+    assert ex["step"] == 8
+    # crash at tick 2 (visible from tick 2's metrics on), rejoin at 6
+    assert ex["n_active"] == [4, 4, 3, 3, 3, 3, 4, 4]
+    assert ex["dead_row_frozen"]
+    # at most 2 compiles: one cold, one when the first step's outputs come
+    # back committed to their shardings — the crash (tick 2), drop-round
+    # toggles and rejoin (tick 6) operand swaps must add ZERO retraces
+    assert ex["cache_size"] <= 2

@@ -1,0 +1,296 @@
+"""Elastic membership contracts (DESIGN §15).
+
+Pins the tentpole guarantees of PR 8:
+
+  * only-active matching — ``masked_pair_partners`` is an involution that
+    never pairs across the liveness boundary, and with everyone live it
+    reproduces the legacy ``pair_partners`` matching BITWISE;
+  * reschedule conformance — for every deterministic topology and several
+    active-set sizes (including non-power-of-two shrinks of ``full``),
+    every realized matrix is doubly stochastic at capacity, identity on
+    the dead slots, and restricts EXACTLY to ``make_schedule(topology,
+    n_active)`` on the live ones; the active-set spectral profile still
+    contracts;
+  * elastic == legacy — an all-active elastic state trains bitwise
+    identically to the fixed-fleet path (DPSGD and AD-PSGD, flat and
+    pytree engines);
+  * quarantine — a crashed learner's rows are bitwise-frozen, and even
+    NaN-poisoning them leaves every live learner's trajectory bitwise
+    unchanged and finite;
+  * admit — a consensus join clones the live mean into the slot and
+    training continues finite;
+  * the serving bridge excludes dead rows from the consensus snapshot.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AlgoConfig, Membership, MultiLearnerTrainer, admit,
+                        reschedule)
+from repro.core import schedule as gsched
+from repro.core import topology as topo
+from repro.data import ShardedLoader, TemplateImages
+from repro.models import fcnet
+from repro.optim import sgd
+from repro.serve.bridge import ConsensusBridge
+
+N = 5
+LOADER = ShardedLoader(TemplateImages(), n_learners=N, local_batch=32,
+                       seed=0)
+PARAMS = fcnet.init_params(jax.random.PRNGKey(0), in_dim=784, hidden=50)
+
+
+def _trainer(algo, engine, topology="random_pair", n=N, **kw):
+    if algo == "adpsgd":
+        kw.setdefault("max_staleness", 4)
+    return MultiLearnerTrainer(
+        fcnet.loss_fn, sgd(0.1, momentum=0.9),
+        AlgoConfig(algo=algo, topology=topology, n_learners=n,
+                   noise_std=0.0, **kw),
+        engine=engine)
+
+
+def _params_np(tr, st):
+    return [np.asarray(x) for x in
+            jax.tree_util.tree_leaves(tr.params_tree(st))]
+
+
+def _run(tr, st, steps, loader=LOADER, start=0):
+    for i in range(start, start + steps):
+        st, m = tr.train_step(st, loader.batch(i))
+    return st, m
+
+
+def _copy_state(st):
+    """Deep-copy every array leaf: train_step donates its input state, so
+    two states that share buffers cannot both be stepped."""
+    return jax.tree_util.tree_map(lambda x: jnp.array(x, copy=True), st)
+
+
+# ---------------------------------------------------------------------------
+# masked matching
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 5, 8, 13])
+def test_masked_matching_all_active_matches_legacy_bitwise(n):
+    for seed in range(6):
+        key = jax.random.PRNGKey(seed)
+        legacy = topo.pair_partners(key, n)
+        masked = topo.masked_pair_partners(key, jnp.ones((n,), bool))
+        np.testing.assert_array_equal(np.asarray(masked), np.asarray(legacy))
+
+
+@pytest.mark.parametrize("n,live", [(5, [0, 2, 3]), (8, [1]), (8, [0, 7]),
+                                    (6, [0, 1, 2, 3, 4]), (4, [])])
+def test_masked_matching_only_pairs_active(n, live):
+    active = np.zeros(n, bool)
+    active[live] = True
+    for seed in range(6):
+        p = np.asarray(topo.masked_pair_partners(
+            jax.random.PRNGKey(seed), jnp.asarray(active)))
+        # involution, inactive solo, liveness boundary never crossed
+        np.testing.assert_array_equal(p[p], np.arange(n))
+        assert (p[~active] == np.flatnonzero(~active)).all()
+        matched = p != np.arange(n)
+        assert active[matched].all() and active[p[matched]].all()
+        # even active count: everyone live is matched; odd: exactly one solo
+        n_live_solo = int((~matched & active).sum())
+        assert n_live_solo == (len(live) % 2 if live else 0)
+
+
+def test_masked_matching_drop_round_forces_identity():
+    active = jnp.ones((6,), bool)
+    p = topo.masked_pair_partners(jax.random.PRNGKey(3), active,
+                                  drop=jnp.asarray(True))
+    np.testing.assert_array_equal(np.asarray(p), np.arange(6))
+
+
+# ---------------------------------------------------------------------------
+# reschedule conformance (satellite: every topology x several active sets)
+# ---------------------------------------------------------------------------
+
+CAP = 8
+ACTIVE_SETS = (
+    list(range(8)),            # full fleet
+    [0, 2, 3, 4, 6],           # non-power-of-two shrink (8 -> 5)
+    [1, 2, 5, 7],              # 4 live
+    [0, 4],                    # pair
+    [3],                       # lone survivor -> identity
+)
+
+
+@pytest.mark.parametrize("topology", gsched.DETERMINISTIC_TOPOLOGIES)
+@pytest.mark.parametrize("live", ACTIVE_SETS,
+                         ids=[f"m{len(a)}" for a in ACTIVE_SETS])
+def test_reschedule_conformant_embedding(topology, live):
+    active = np.zeros(CAP, bool)
+    active[live] = True
+    m = len(live)
+    sched = reschedule(topology, active)
+    inner = gsched.make_schedule(topology, m) if m > 1 else None
+    steps = max(sched.period, 4)
+    for t in range(steps):
+        key = jax.random.PRNGKey(t)
+        M = np.asarray(sched.step_matrix(key, t), np.float64)
+        # doubly stochastic at capacity, nonnegative
+        assert (M >= -1e-6).all()
+        np.testing.assert_allclose(M.sum(0), 1.0, atol=1e-5)
+        np.testing.assert_allclose(M.sum(1), 1.0, atol=1e-5)
+        # dead slots: exact identity rows AND columns (no coupling)
+        dead = ~active
+        np.testing.assert_array_equal(M[dead][:, dead],
+                                      np.eye(CAP - m))
+        assert np.all(M[dead][:, active] == 0.0)
+        assert np.all(M[active][:, dead] == 0.0)
+        # live submatrix == the conformant n_active schedule, exactly
+        if inner is not None:
+            want = np.asarray(inner.step_matrix(key, t), np.float64)
+            np.testing.assert_allclose(M[np.ix_(live, live)], want,
+                                       atol=1e-6)
+        else:
+            np.testing.assert_array_equal(M[np.ix_(live, live)],
+                                          np.eye(m))
+
+
+@pytest.mark.parametrize("topology", ("full", "ring", "one_peer_exp"))
+def test_reschedule_active_set_still_contracts(topology):
+    active = np.zeros(CAP, bool)
+    active[[0, 2, 3, 4, 6]] = True            # non-pow2 shrink of full
+    prof = gsched.spectral_gap_profile(reschedule(topology, active),
+                                       window=8)
+    assert prof["measured_rate"] <= prof["bound_rate"] + 1e-9
+    assert prof["measured_gap"] > 0.0         # live learners still mix
+
+
+def test_reschedule_randomized_draws_from_mask():
+    active = np.array([True, False, True, True, False])
+    sched = reschedule("random_pair", active)
+    assert sched.randomized and sched.n == 5
+    np.testing.assert_array_equal(np.asarray(sched.active), active)
+
+
+# ---------------------------------------------------------------------------
+# elastic trainer == legacy trainer when everyone is live
+# ---------------------------------------------------------------------------
+
+PARITY_CASES = [
+    ("dpsgd", "flat", "random_pair"),
+    ("dpsgd", "flat", "ring"),
+    ("dpsgd", "flat", "one_peer_exp"),
+    ("dpsgd", "pytree", "random_pair"),
+    ("adpsgd", "flat", "random_pair"),
+    ("adpsgd", "pytree", "random_pair"),
+]
+
+
+@pytest.mark.parametrize("algo,engine,topology", PARITY_CASES)
+def test_all_active_elastic_is_bitwise_legacy(algo, engine, topology):
+    tr = _trainer(algo, engine, topology)
+    st_legacy = tr.init(jax.random.PRNGKey(1), PARAMS)
+    st_el = tr.set_membership(tr.init(jax.random.PRNGKey(1), PARAMS),
+                              Membership(N))
+    st_legacy, m_l = _run(tr, st_legacy, 4)
+    st_el, m_e = _run(tr, st_el, 4)
+    for a, b in zip(_params_np(tr, st_legacy), _params_np(tr, st_el)):
+        np.testing.assert_array_equal(a, b)
+    # the masked metric reduction (sum/n_active vs mean) may differ by ulps
+    np.testing.assert_allclose(float(m_e.loss), float(m_l.loss), rtol=1e-6)
+    assert int(m_e.n_active) == N
+
+
+@pytest.mark.parametrize("algo,engine", [("dpsgd", "flat"),
+                                         ("dpsgd", "pytree"),
+                                         ("adpsgd", "flat")])
+def test_crashed_row_frozen_and_garbage_invariant(algo, engine):
+    tr = _trainer(algo, engine)
+    mem = Membership(N)
+    st = tr.set_membership(tr.init(jax.random.PRNGKey(2), PARAMS), mem)
+    st, _ = _run(tr, st, 2)
+    mem.crash(3)
+    st = tr.set_membership(st, mem)
+    dead_rows = [x[3] for x in _params_np(tr, st)]
+
+    # a second fleet, identical except learner 3's quarantined rows are
+    # poisoned with NaN: the live learners must not see the difference
+    st_poison = _copy_state(st)
+    view = tr.state_view(st_poison)
+    poisoned = jax.tree_util.tree_map(
+        lambda x: x.at[3].set(jnp.nan) if jnp.issubdtype(
+            x.dtype, jnp.floating) and x.ndim >= 1 and x.shape[0] == N
+        else x, view.params)
+    st_poison = tr.state_from_view(view._replace(params=poisoned))
+    if st.buffer is not None:
+        bview = tr.state_view(st_poison)
+        st_poison = tr.state_from_view(bview._replace(
+            buffer=jax.tree_util.tree_map(
+                lambda x: x.at[3].set(jnp.nan), bview.buffer)))
+
+    st, m = _run(tr, st, 3, start=2)
+    st_poison, m_p = _run(tr, st_poison, 3, start=2)
+
+    for leaf, dead in zip(_params_np(tr, st), dead_rows):
+        np.testing.assert_array_equal(leaf[3], dead)   # bitwise-frozen
+    live = [0, 1, 2, 4]
+    for a, b in zip(_params_np(tr, st), _params_np(tr, st_poison)):
+        np.testing.assert_array_equal(a[live], b[live])
+        assert np.isfinite(a[live]).all()
+    assert float(m.loss) == float(m_p.loss) and np.isfinite(float(m.loss))
+    assert int(m.n_active) == N - 1
+
+
+@pytest.mark.parametrize("engine", ["flat", "pytree"])
+def test_admit_clones_live_consensus(engine):
+    tr = _trainer("dpsgd", engine)
+    mem = Membership(N)
+    st = tr.set_membership(tr.init(jax.random.PRNGKey(4), PARAMS), mem)
+    st, _ = _run(tr, st, 2)
+    mem.crash(1)
+    st = tr.set_membership(st, mem)
+    st, _ = _run(tr, st, 2, start=2)
+
+    st2 = admit(tr, st, 1, mode="consensus")
+    view = tr.state_view(st2)
+    act = np.array([True, False, True, True, True])
+    for leaf in jax.tree_util.tree_leaves(view.params):
+        x = np.asarray(leaf)
+        want = x[act].astype(np.float32).mean(0).astype(x.dtype)
+        np.testing.assert_allclose(x[1], want, rtol=1e-5, atol=1e-7)
+    mem.rejoin(1)
+    assert mem.incarnation[1] == 1
+    st2 = tr.set_membership(st2, mem)
+    st2, m = _run(tr, st2, 2, start=4)
+    assert np.isfinite(float(m.loss)) and int(m.n_active) == N
+
+
+def test_bridge_snapshot_excludes_dead_rows():
+    tr = _trainer("dpsgd", "flat")
+    mem = Membership(N)
+    st = tr.set_membership(tr.init(jax.random.PRNGKey(5), PARAMS), mem)
+    st, _ = _run(tr, st, 2)
+    mem.crash(2)
+    st = tr.set_membership(st, mem)
+    # poison the quarantined row: a folded-in dead row would blow up the mean
+    view = tr.state_view(st)
+    st = tr.state_from_view(view._replace(params=jax.tree_util.tree_map(
+        lambda x: x.at[2].set(1e30), view.params)))
+
+    bridge = ConsensusBridge(tr)
+    snap = bridge.snapshot(st)
+    assert snap.n_active == N - 1
+    live = np.array([0, 1, 3, 4])
+    stacked = tr.params_tree(st)
+    for got, leaf in zip(jax.tree_util.tree_leaves(snap.params),
+                         jax.tree_util.tree_leaves(stacked)):
+        want = np.asarray(leaf)[live].astype(np.float32).mean(0)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5,
+                                   atol=1e-7)
+        assert np.isfinite(np.asarray(got)).all()
+    assert np.isfinite(bridge.staleness(st, snap)["consensus_dist_now"])
+
+
+def test_set_membership_rejects_non_decentralized():
+    tr = _trainer("ssgd", "pytree")
+    st = tr.init(jax.random.PRNGKey(6), PARAMS)
+    with pytest.raises(ValueError, match="decentralized"):
+        tr.set_membership(st, Membership(N))
