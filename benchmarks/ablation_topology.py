@@ -85,10 +85,10 @@ def main(argv=None):
     assert all(r[6] >= r[5] - 1e-9 for r in rows), rows
     derived = (f"full={d['full'][7]:.3f} ring={d['ring'][7]:.3f} "
                f"pair={d['random_pair'][7]:.3f} solo={d['solo'][7]:.3f} "
-               f"(partial averaging beats full & none); one_peer_exp "
+               "(partial averaging beats full & none); one_peer_exp "
                f"measured_gap={d['one_peer_exp'][6]:.2f} vs per-step bound "
                f"{d['one_peer_exp'][5]:.2f} at 1 collective/step; all "
-               f"schedules fused")
+               "schedules fused")
     print(f"ablation_topology,{us / max(len(rows), 1):.0f},{derived}")
 
 

@@ -188,7 +188,7 @@ def main(argv=None):
                 ["algo", "pytree_us_per_step", "flat_us_per_step",
                  "flat_speedup", "flat_tokens_per_s"], rows)
     d = report["dpsgd"]
-    derived = (f"flat/pytree speedup: "
+    derived = ("flat/pytree speedup: "
                + " ".join(f"{a}={report[a]['flat_speedup']:.2f}x"
                           for a in ALGOS)
                + f"; dpsgd flat {d['tokens_per_s_flat']:.0f} tok/s, "

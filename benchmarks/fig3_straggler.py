@@ -66,7 +66,7 @@ def main(argv=None):
                f"async={derived_bits['async_ms']:.1f}; final loss "
                f"sync={derived_bits['sync_loss']:.3f} "
                f"async={derived_bits['async_loss']:.3f} "
-               f"(paper Fig3: DPSGD immune)")
+               "(paper Fig3: DPSGD immune)")
     print(f"fig3_straggler,{us:.0f},{derived}")
 
 

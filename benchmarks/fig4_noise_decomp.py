@@ -19,7 +19,7 @@ def main(argv=None):
     ratio_early = early[2] / max(early[1], 1e-20)
     derived = (f"delta2/deltaS early={ratio_early:.1f} "
                f"delta2 early={early[2]:.2e} late={late[2]:.2e} "
-               f"(paper: Delta2>>DeltaS early, decays)")
+               "(paper: Delta2>>DeltaS early, decays)")
     print(f"fig4_noise_decomp,{r['us_per_step']:.0f},{derived}")
 
 

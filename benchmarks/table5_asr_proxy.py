@@ -12,7 +12,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .common import final_loss, train_fc, write_table
+from .common import final_loss, write_table
 
 
 @dataclasses.dataclass(frozen=True)

@@ -140,7 +140,7 @@ def main(argv=None) -> int:
         return 2
     if len(payloads) < 2:
         prs = [p["pr"] for p in payloads]
-        print(f"trajectory: need >= 2 PRs of BENCH_*.json to align "
+        print("trajectory: need >= 2 PRs of BENCH_*.json to align "
               f"(found {prs}); run `python -m benchmarks.matrix --smoke` "
               "and/or `python -m benchmarks.bench_throughput` first",
               file=sys.stderr)

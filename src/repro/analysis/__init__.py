@@ -1,0 +1,16 @@
+"""Static invariant auditor: jaxpr rules, retrace sentinel, AST lint
+(DESIGN §16).  jax-free at import time — the traced-rule modules
+(``jaxpr_audit``, ``retrace``, ``targets``) import jax only when used, so
+``repro.analysis.lint`` stays a millisecond import for editors and CI."""
+from .lint import lint_root
+from .report import RULES, Finding, format_findings, rule
+
+__all__ = ["Finding", "RULES", "rule", "format_findings", "lint_root",
+           "load_all_rules"]
+
+
+def load_all_rules():
+    """Import every rule module (jax included) and return the full
+    name -> contract catalog.  DESIGN §16's rule table is this dict."""
+    from . import jaxpr_audit, retrace  # noqa: F401  (registration)
+    return dict(RULES)

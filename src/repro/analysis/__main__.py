@@ -1,0 +1,5 @@
+import sys
+
+from .run import main
+
+sys.exit(main())

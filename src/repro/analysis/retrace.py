@@ -1,0 +1,101 @@
+"""Retrace sentinel (DESIGN §16): compile-count stays fixed across swaps.
+
+The repo's membership tables (PR 8), controller scale writes (PR 5), and
+serve admissions (PR 7) are all designed as *operand* changes: new arrays
+flow through the same compiled executable, and nothing retraces.  Each of
+those designs was pinned by an ad-hoc ``_cache_size()`` assertion in its own
+test file; this module formalizes the pattern as a reusable context manager
+plus a registered rule, so any "this must not recompile" window reads as
+
+    with RetraceSentinel(trainer.train_step, eng._step_fn) as s:
+        trainer.set_membership(ms2)
+        trainer.run(...)
+    # raises RetraceError (or, in collect mode, yields findings) on growth
+
+``jax.jit`` functions expose the per-function tracing-cache size as
+``_cache_size()``; serve's ``_jitted`` wrapper hangs the jitted callable on
+the wrapped function (``fn._serve_jitted``), which the sentinel unwraps.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from .report import Finding, rule
+
+__all__ = ["RetraceError", "RetraceSentinel", "compile_count", "no_retrace"]
+
+
+class RetraceError(AssertionError):
+    """A jitted function recompiled inside a sentinel window."""
+
+
+def _jitted_of(fn):
+    # serve/engine.py's _jitted caches the jit'd callable on the raw fn
+    return getattr(fn, "_serve_jitted", fn)
+
+
+def compile_count(fn) -> int:
+    """Number of traces held by ``fn``'s jit cache (0 if never called).
+
+    Accepts a ``jax.jit`` result or a function wrapped by serve's
+    ``_jitted`` helper.  Raises TypeError for a plain Python function —
+    a sentinel watching an un-jitted callable would vacuously pass.
+    """
+    j = _jitted_of(fn)
+    sz = getattr(j, "_cache_size", None)
+    if sz is None:
+        raise TypeError(
+            f"{fn!r} has no jit trace cache — pass the jitted callable "
+            "(jax.jit result or a serve _jitted-wrapped fn)")
+    return sz()
+
+
+class RetraceSentinel:
+    """Assert compile-count is unchanged across a window of operand swaps.
+
+    ``strict=True`` (default) raises RetraceError on exit; ``strict=False``
+    collects into ``self.findings`` for the auditor's report path.  Watched
+    functions are labeled by their qualname unless ``labels`` is given.
+    """
+
+    def __init__(self, *fns, strict: bool = True,
+                 labels: Sequence[str] = ()):
+        if not fns:
+            raise ValueError("RetraceSentinel needs at least one jitted fn")
+        self.fns = fns
+        self.strict = strict
+        self.labels = list(labels) or [
+            getattr(_jitted_of(f), "__name__", None)
+            or getattr(f, "__name__", repr(f)) for f in fns]
+        if len(self.labels) != len(fns):
+            raise ValueError("labels must match watched fns")
+        self.findings: List[Finding] = []
+
+    def __enter__(self):
+        self._before = [compile_count(f) for f in self.fns]
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is not None:      # don't mask the real failure
+            return False
+        for fn, label, before in zip(self.fns, self.labels, self._before):
+            after = compile_count(fn)
+            if after != before:
+                self.findings.append(Finding(
+                    "no-retrace", label,
+                    f"compile count {before} -> {after} inside a sentinel "
+                    "window — an operand swap triggered a retrace"))
+        if self.strict and self.findings:
+            raise RetraceError("\n".join(str(f) for f in self.findings))
+        return False
+
+
+@rule("no-retrace",
+      "membership table swaps, controller scale writes, and serve "
+      "admissions are operand changes: compile count must not grow")
+def no_retrace(action, *fns, labels: Sequence[str] = ()) -> List[Finding]:
+    """Run ``action()`` under a non-strict sentinel watching ``fns`` and
+    return the findings (empty == no retrace)."""
+    with RetraceSentinel(*fns, strict=False, labels=labels) as s:
+        action()
+    return s.findings

@@ -1,0 +1,150 @@
+"""CLI for the static invariant auditor (``make lint``; DESIGN §16).
+
+    python -m repro.analysis.run               # AST + jaxpr/retrace audits
+    python -m repro.analysis.run --ast-only    # jax-free rules only (fast)
+    python -m repro.analysis.run --root DIR    # AST pass over a fixture tree
+    python -m repro.analysis.run --selftest    # prove the auditor still bites
+
+Exit 0: clean.  Exit 1: findings (or, under ``--selftest``, a rule that
+failed to fire on its seeded violation).  Exit 2: the auditor itself broke.
+
+The jaxpr/retrace audits re-exec this module with ``--jaxpr-stage`` under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the pjit launch
+target sees a real (4, 2) mesh — same subprocess idiom as the launch tests
+(the flag only works before the jax import, and the parent may already have
+jax loaded with one device).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+from pathlib import Path
+from typing import List
+
+from .lint import lint_root
+from .report import RULES, Finding, format_findings
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+_DEVICE_FLAG = "--xla_force_host_platform_device_count=8"
+
+
+def _jaxpr_stage() -> int:
+    """Run the traced audits over all three hot paths (child process)."""
+    os.environ.setdefault("XLA_FLAGS", _DEVICE_FLAG)
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    from .targets import audit_launch, audit_serve, audit_trainer
+    findings: List[Finding] = []
+    for name, audit in [("trainer", audit_trainer),
+                        ("launch", audit_launch),
+                        ("serve", audit_serve)]:
+        print(f"analysis: auditing {name} ...", flush=True)
+        findings += audit()
+    if findings:
+        print(format_findings(findings))
+        return 1
+    return 0
+
+
+def _run_jaxpr_subprocess() -> int:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = _DEVICE_FLAG
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(REPO_ROOT / "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.run", "--jaxpr-stage"],
+        env=env, cwd=REPO_ROOT, timeout=1800)
+    return r.returncode
+
+
+def _selftest() -> int:
+    """Negative control: the seeded violation fixture must light up every
+    AST rule, and toy traced programs must trip each jaxpr rule.  A lint
+    pass that has gone blind passes everything — this is the tripwire."""
+    failures = []
+
+    fixture = REPO_ROOT / "tests" / "fixtures" / "lint_violations"
+    if not fixture.is_dir():
+        print(f"selftest: fixture tree missing: {fixture}", file=sys.stderr)
+        return 2
+    fired = {f.rule for f in lint_root(fixture)}
+    for want in ("no-host-sync", "no-id-cache", "kernel-oracle",
+                 "design-refs"):
+        if want not in fired:
+            failures.append(f"AST rule {want!r} did not fire on the "
+                            "seeded fixture")
+
+    import jax
+    import jax.numpy as jnp
+    from .jaxpr_audit import (max_concat_elems, no_host_callback,
+                              no_param_concat)
+
+    big = jax.make_jaxpr(
+        lambda a, b: jnp.concatenate([a, b]))(jnp.ones(600), jnp.ones(600))
+    if not no_param_concat(big, bound=1000, target="selftest"):
+        failures.append("no-param-concat missed a seeded 1200-elem concat")
+    if max_concat_elems(big) != 1200:
+        failures.append("max_concat_elems miscounted the seeded concat")
+
+    cb = jax.make_jaxpr(lambda x: jax.pure_callback(
+        lambda v: v, jax.ShapeDtypeStruct((), jnp.float32), x))(1.0)
+    if not no_host_callback(cb, target="selftest"):
+        failures.append("no-host-callback missed a seeded pure_callback")
+
+    from .retrace import RetraceSentinel
+    f = jax.jit(lambda x: x + 1)
+    f(jnp.ones(3))
+    with RetraceSentinel(f, strict=False) as s:
+        f(jnp.ones(4))                       # new shape: a real retrace
+    if not s.findings:
+        failures.append("no-retrace missed a seeded shape-change retrace")
+
+    if failures:
+        print("selftest FAILED:\n  " + "\n  ".join(failures))
+        return 1
+    print(f"selftest: all {len(RULES)} registered rules bite "
+          f"({', '.join(sorted(RULES))})")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.run",
+        description="static invariant auditor (DESIGN §16)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="run the AST pass over this tree instead of the "
+                         "repo (fixture trees; implies --ast-only)")
+    ap.add_argument("--ast-only", action="store_true",
+                    help="skip the traced jaxpr/retrace audits")
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify every rule fires on a seeded violation")
+    ap.add_argument("--jaxpr-stage", action="store_true",
+                    help=argparse.SUPPRESS)       # internal re-exec entry
+    args = ap.parse_args(argv)
+
+    if args.jaxpr_stage:
+        return _jaxpr_stage()
+    if args.selftest:
+        return _selftest()
+
+    root = args.root or REPO_ROOT
+    findings = lint_root(root)
+    if findings:
+        print(format_findings(findings))
+        return 1
+    print(f"analysis: AST pass clean over {root}")
+
+    if args.ast_only or args.root is not None:
+        return 0
+    rc = _run_jaxpr_subprocess()
+    if rc == 0:
+        from . import load_all_rules
+        print(f"analysis: clean — {len(load_all_rules())} rules, 0 findings")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

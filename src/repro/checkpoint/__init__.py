@@ -1,4 +1,4 @@
-from .checkpoint import (save_checkpoint, restore_checkpoint, latest_step,
+from .checkpoint import (latest_step, restore_checkpoint, save_checkpoint,
                          verify_checkpoint)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",

@@ -1,16 +1,16 @@
 """Config registry: --arch <id> resolves here."""
 from .base import ModelConfig
-from .mistral_large_123b import CONFIG as MISTRAL_LARGE_123B
-from .seamless_m4t_large_v2 import CONFIG as SEAMLESS_M4T_LARGE_V2
 from .gemma2_27b import CONFIG as GEMMA2_27B
 from .granite_20b import CONFIG as GRANITE_20B
+from .granite_moe_3b_a800m import CONFIG as GRANITE_MOE_3B_A800M
+from .jamba_v01_52b import CONFIG as JAMBA_V01_52B
+from .mistral_large_123b import CONFIG as MISTRAL_LARGE_123B
+from .qwen2_vl_7b import CONFIG as QWEN2_VL_7B
 from .qwen3_moe_235b_a22b import CONFIG as QWEN3_MOE_235B_A22B
+from .seamless_m4t_large_v2 import CONFIG as SEAMLESS_M4T_LARGE_V2
+from .transformer_100m import CONFIG as TRANSFORMER_100M
 from .xlstm_350m import CONFIG as XLSTM_350M
 from .yi_34b import CONFIG as YI_34B
-from .granite_moe_3b_a800m import CONFIG as GRANITE_MOE_3B_A800M
-from .qwen2_vl_7b import CONFIG as QWEN2_VL_7B
-from .jamba_v01_52b import CONFIG as JAMBA_V01_52B
-from .transformer_100m import CONFIG as TRANSFORMER_100M
 
 REGISTRY = {c.name: c for c in [
     MISTRAL_LARGE_123B, SEAMLESS_M4T_LARGE_V2, GEMMA2_27B, GRANITE_20B,

@@ -8,8 +8,7 @@ a repeating *period* that is scanned over, keeping the HLO O(1) in depth.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 def _round_up(x: int, m: int) -> int:

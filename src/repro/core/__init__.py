@@ -1,21 +1,22 @@
 """Core: the paper's contribution — decentralized multi-learner SGD with
 landscape-dependent self-adjusting effective learning rate."""
-from .dpsgd import (AlgoConfig, mix_einsum, mix_ppermute_ring,
-                    mix_ppermute_pair, mix_pair_gather, straggler_active_mask)
-from .topology import (full_matrix, ring_matrix, torus_matrix, pair_partners,
-                       random_pair_matrix, hierarchical_matrix,
-                       exponential_matrix, is_doubly_stochastic, spectral_gap,
-                       make_mixing_fn)
-from .schedule import (GossipSchedule, make_schedule, reschedule,
-                       spectral_gap_profile,
-                       SCHEDULED_TOPOLOGIES, DETERMINISTIC_TOPOLOGIES)
-from .flatstate import FlatMeta, flat_meta, max_concat_elems
-from .trainer import MultiLearnerTrainer, ProbeHook, TrainState, StepMetrics
-from .membership import Membership, MemberState, admit
+from .diagnostics import DiagStats, compute_diagnostics
+from .dpsgd import (AlgoConfig, mix_einsum, mix_pair_gather,
+                    mix_ppermute_pair, mix_ppermute_ring,
+                    straggler_active_mask)
 from .faults import (FaultEvent, FaultPlan, FaultReport, Supervisor,
                      apply_plan)
-from .diagnostics import DiagStats, compute_diagnostics
-from .smoothing import smoothed_loss, estimate_smoothness
+from .flatstate import FlatMeta, flat_meta, max_concat_elems
+from .membership import Membership, MemberState, admit
+from .schedule import (DETERMINISTIC_TOPOLOGIES, SCHEDULED_TOPOLOGIES,
+                       GossipSchedule, make_schedule, reschedule,
+                       spectral_gap_profile)
+from .smoothing import estimate_smoothness, smoothed_loss
+from .topology import (exponential_matrix, full_matrix, hierarchical_matrix,
+                       is_doubly_stochastic, make_mixing_fn, pair_partners,
+                       random_pair_matrix, ring_matrix, spectral_gap,
+                       torus_matrix)
+from .trainer import MultiLearnerTrainer, ProbeHook, StepMetrics, TrainState
 from .util import (learner_mean, learner_var, masked_learner_mean,
                    masked_learner_var)
 

@@ -25,8 +25,8 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .util import (learner_mean, learner_var, tree_dot, tree_norm_sq, tree_sub,
-                   tree_scale)
+from .util import (learner_mean, learner_var, tree_dot, tree_norm_sq,
+                   tree_scale, tree_sub)
 
 
 class DiagStats(NamedTuple):

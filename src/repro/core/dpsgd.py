@@ -31,8 +31,6 @@ bitwise — to synchronous pairwise DPSGD (asserted in tests).  See DESIGN §3.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +38,7 @@ import numpy as np
 
 from . import topology as topo
 from .flatstate import flat_meta
-from .util import tree_gaussian_like, learner_mean
+from .util import learner_mean, tree_gaussian_like
 
 __all__ = ["AlgoConfig", "mix_einsum", "mix_ppermute_ring", "mix_ppermute_pair",
            "mix_ppermute_ring_flat", "mix_ppermute_pair_flat",

@@ -229,7 +229,9 @@ class Supervisor:
         mem = self.membership
         clock = getattr(state, "clock", None)
         if clock is not None:          # AD-PSGD: real per-learner progress
-            c = np.asarray(clock)
+            # wedge detection must read real device progress, once per
+            # supervisor tick — an intentional sync
+            c = np.asarray(clock)                # lint: allow-host-sync
             advanced = c > self._last_clock
             self._last_clock = np.maximum(self._last_clock, c)
         else:                          # sync DPSGD: heartbeat-equivalent

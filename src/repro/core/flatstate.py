@@ -183,42 +183,13 @@ def flat_meta(tree) -> FlatMeta:
 # jaxpr audit: prove the hot step carries no parameter-sized concatenate
 # ---------------------------------------------------------------------------
 
-try:                                      # jax >= 0.6 moved these
-    from jax.extend.core import ClosedJaxpr as _ClosedJaxpr, Jaxpr as _Jaxpr
-except (ImportError, AttributeError):     # pragma: no cover - old jax
-    _ClosedJaxpr, _Jaxpr = jax.core.ClosedJaxpr, jax.core.Jaxpr
-
-
-def _iter_eqns(jaxpr):
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            for sub in _subjaxprs(v):
-                yield from _iter_eqns(sub)
-
-
-def _subjaxprs(v):
-    if isinstance(v, _ClosedJaxpr):
-        yield v.jaxpr
-    elif isinstance(v, _Jaxpr):
-        yield v
-    elif isinstance(v, (list, tuple)):
-        for item in v:
-            yield from _subjaxprs(item)
-
-
 def max_concat_elems(closed_jaxpr) -> int:
     """Largest ``concatenate`` output (in elements) anywhere in the jaxpr.
 
-    The flat engine's contract is that this stays far below the parameter
-    count inside a train step: RNG internals emit tiny concats (threefry key
-    plumbing), but nothing parameter-sized — the flatten happened once, at
-    init.  Used by the tier-1 guard test and the bench harness.
+    The implementation moved to ``repro.analysis.jaxpr_audit`` when the
+    ad-hoc check grew into the rule framework (DESIGN §16); this delegate
+    keeps the original import path for the tier-1 guard test and the bench
+    harness.  Imported lazily so core stays importable without analysis.
     """
-    worst = 0
-    for eqn in _iter_eqns(closed_jaxpr.jaxpr):
-        if eqn.primitive.name == "concatenate":
-            for out in eqn.outvars:
-                worst = max(worst, int(np.prod(out.aval.shape,
-                                               dtype=np.int64)))
-    return worst
+    from repro.analysis.jaxpr_audit import max_concat_elems as _impl
+    return _impl(closed_jaxpr)

@@ -17,7 +17,7 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from .util import tree_gaussian_like, tree_sub, tree_norm_sq, tree_add
+from .util import tree_add, tree_gaussian_like, tree_norm_sq, tree_sub
 
 
 def smoothed_loss(loss_fn: Callable, params, batch, key, sigma: float,

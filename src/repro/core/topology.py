@@ -148,7 +148,6 @@ def hierarchical_matrix(n_super: int, group: int, inner: str = "full",
                         dtype=jnp.float32) -> jnp.ndarray:
     """Paper App. F: group `group` nearby learners into a super-learner that
     fully averages internally, ring-gossip across super-learners."""
-    n = n_super * group
     intra = np.kron(np.eye(n_super), np.full((group, group), 1.0 / group))
     outer = np.asarray(ring_matrix(n_super))
     inter = np.kron(outer, np.full((group, group), 1.0 / group))

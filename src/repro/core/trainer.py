@@ -35,12 +35,12 @@ and reuses the same pure update functions.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..optim import Optimizer, apply_updates
 from . import schedule as gsched
 from . import topology as topo
 from .diagnostics import DiagStats, compute_diagnostics
@@ -48,10 +48,9 @@ from .dpsgd import (AlgoConfig, mean_broadcast, member_active_mask,
                     mix_einsum, mix_pair_gather, pair_partners,
                     perturb_weights, straggler_active_mask)
 from .flatstate import LANE, FlatMeta, flat_meta
-from .membership import MemberState, Membership
+from .membership import Membership, MemberState
 from .util import (learner_mean, learner_var, masked_learner_mean,
                    masked_learner_var)
-from ..optim import Optimizer, apply_updates
 
 
 class TrainState(NamedTuple):
@@ -136,7 +135,7 @@ class MultiLearnerTrainer:
                 and self._schedule is not None
                 and self._schedule.time_varying):
             raise ValueError(
-                f"this optimizer's correction assumes a STATIC mixing "
+                "this optimizer's correction assumes a STATIC mixing "
                 f"matrix, but topology='{self.algo.topology}' compiles to a "
                 "time-varying GossipSchedule — the exact DecentLaM drift "
                 "diverges under switching matchings (see optim/decentlam.py)."

@@ -1,7 +1,7 @@
-from .synthetic import (GaussianMixtureImages, SyntheticTokenStream,
-                        TemplateImages, ZipfianTokenStream,
-                        TeacherStudentRegression)
 from .pipeline import ShardedLoader, stack_learner_batches
+from .synthetic import (GaussianMixtureImages, SyntheticTokenStream,
+                        TeacherStudentRegression, TemplateImages,
+                        ZipfianTokenStream)
 
 __all__ = ["GaussianMixtureImages", "SyntheticTokenStream", "TemplateImages", "ZipfianTokenStream",
            "TeacherStudentRegression", "ShardedLoader", "stack_learner_batches"]

@@ -1,10 +1,10 @@
-from .ops import (flash_attention, dpsgd_fused_update, flat_gossip_update,
-                  reorthogonalize)
-from .gossip_mix import (gossip_mix_update, gossip_mix_update_flat,
-                         flatten_for_kernel)
-from .flash_attention import flash_attention_fwd
-from .reorth import reorth_pass, reorth_dots, reorth_axpy
 from . import ref
+from .flash_attention import flash_attention_fwd
+from .gossip_mix import (flatten_for_kernel, gossip_mix_update,
+                         gossip_mix_update_flat)
+from .ops import (dpsgd_fused_update, flash_attention, flat_gossip_update,
+                  reorthogonalize)
+from .reorth import reorth_axpy, reorth_dots, reorth_pass
 
 __all__ = ["flash_attention", "dpsgd_fused_update", "flat_gossip_update",
            "gossip_mix_update", "gossip_mix_update_flat",

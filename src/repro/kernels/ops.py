@@ -15,12 +15,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from . import ref
 from .decode_attention import paged_decode_attention_fwd
 from .flash_attention import flash_attention_fwd
 from .gossip_mix import (flatten_for_kernel, gossip_mix_update,
                          gossip_mix_update_flat)
 from .reorth import reorth_pass
-from . import ref
 
 
 def _on_cpu() -> bool:

@@ -22,7 +22,6 @@ the interior spectrum is.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, NamedTuple
 
 import jax

@@ -16,13 +16,13 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from ..core.util import learner_mean, learner_var, tree_norm_sq
-from .hvp import hutchinson_trace, superbatch_loss_fn, trace_hc
+from .hvp import hutchinson_trace, trace_hc
 from .lanczos import lanczos_pytree, sharpness
 from .predictor import predict_alpha_e
 

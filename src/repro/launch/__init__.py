@@ -1,4 +1,5 @@
-from .mesh import make_production_mesh, make_test_mesh, learner_axes, n_learners
+from .mesh import (learner_axes, make_production_mesh, make_test_mesh,
+                   n_learners)
 
 __all__ = ["make_production_mesh", "make_test_mesh", "learner_axes",
            "n_learners"]

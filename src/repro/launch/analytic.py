@@ -11,7 +11,6 @@ All results are PER CHIP: totals divided by the chip count.
 """
 from __future__ import annotations
 
-import dataclasses
 
 from ..configs.base import ModelConfig
 from ..models.transformer import period_spec

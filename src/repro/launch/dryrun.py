@@ -13,7 +13,6 @@ import argparse
 import json
 import time
 import traceback
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +25,8 @@ from ..optim import sgd
 from . import analytic, sharding as shd
 from .mesh import make_production_mesh, n_learners
 from .roofline import memory_summary, roofline_from_compiled
-from .train import (jit_train_step, make_dpsgd_train_step, make_prefill_step,
-                    make_decode_step, make_ssgd_train_step,
+from .train import (jit_train_step, make_decode_step, make_dpsgd_train_step,
+                    make_prefill_step, make_ssgd_train_step,
                     train_state_shardings, train_state_specs)
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -57,7 +56,6 @@ def build_lowered(arch: str, shape: str, *, multi_pod: bool, algo: str,
     seq_len, global_batch, kind = SHAPES[shape]
     mesh = make_production_mesh(multi_pod=multi_pod)
     api = build_model(cfg)
-    L = n_learners(mesh)
 
     if kind == "train":
         opt = sgd(lr=0.1, momentum=0.9)

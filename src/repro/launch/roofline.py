@@ -23,7 +23,6 @@ Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List
 

@@ -16,7 +16,6 @@ Training adds a leading learner dim sharded over the learner axes.
 """
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 from jax.sharding import PartitionSpec as P
@@ -43,11 +42,9 @@ def leaf_spec(path, leaf, model_size: int, *, model_axis: str = "model",
     """PartitionSpec for one (possibly learner-stacked) param leaf."""
     name = _path_str(path)
     shape = leaf.shape
-    offset = 0
     lead = ()
     if learner_axes:
         lead = (learner_axes,)
-        offset = 1
         shape = shape[1:]
 
     if len(shape) <= 1:

@@ -22,8 +22,6 @@ cache) with the inference sharding rules from launch/sharding.py.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -113,7 +111,7 @@ def make_dpsgd_train_step(api: ModelAPI, optimizer: Optimizer, mesh,
             and getattr(optimizer, "static_mixing_only", False)
             and sched is not None and sched.time_varying):
         raise ValueError(
-            f"optimizer assumes a static mixing matrix but "
+            "optimizer assumes a static mixing matrix but "
             f"topology='{topology}' compiles to a time-varying "
             "GossipSchedule (see optim/decentlam.py)")
 

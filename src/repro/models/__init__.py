@@ -1,4 +1,4 @@
-from .model import ModelAPI, build_model, make_synthetic_batch
 from . import fcnet
+from .model import ModelAPI, build_model, make_synthetic_batch
 
 __all__ = ["ModelAPI", "build_model", "make_synthetic_batch", "fcnet"]

@@ -12,8 +12,7 @@ min(seq_len, window) so long_500k sliding-window serving is O(window) memory.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -15,8 +15,7 @@ import jax.numpy as jnp
 from ..configs.base import ModelConfig
 from .attention import (attn_decode, attn_forward, init_attn_cache,
                         init_attn_params)
-from .layers import (cross_entropy, dense_init, dtype_of, embed_init,
-                     rms_norm, softcap)
+from .layers import dense_init, dtype_of, embed_init, rms_norm, softcap
 from .transformer import make_rope_fn
 
 
@@ -159,7 +158,6 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
     """tokens: (B, 1) -> (logits (B, 1, V), new_cache)."""
     x = params["embed"][tokens] * math.sqrt(cfg.d_model)
     rope_fn = make_rope_fn(cfg)
-    NEG = -1e30
 
     def layer(x, inp):
         lp, cc, xc = inp

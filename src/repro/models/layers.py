@@ -2,12 +2,10 @@
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig
 
 
 def dtype_of(name: str):

@@ -126,7 +126,6 @@ def mamba_decode(params, cache, x, *, expand: int = 2, state: int = 16,
                  conv: int = 4):
     """x: (B, 1, d) -> (out (B, 1, d), new_cache)."""
     B, _, d = x.shape
-    di = expand * d
     dt_rank = params["dt_proj"].shape[0]
 
     xz = x @ params["in_proj"]

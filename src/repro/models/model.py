@@ -18,7 +18,6 @@ Families:
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Callable, NamedTuple
 
@@ -65,7 +64,6 @@ def _mrope_positions(cfg: ModelConfig, P: int, S_text: int):
 
 
 def build_model(cfg: ModelConfig) -> ModelAPI:
-    dt = dtype_of(cfg.param_dtype)
     act_dt = dtype_of(cfg.compute_dtype)
 
     # ------------------------------------------------------------- text LM --

@@ -12,7 +12,6 @@ slstm} and mlp in {dense, moe, none}.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Tuple
 
 import jax
@@ -22,8 +21,8 @@ from ..configs.base import ModelConfig
 from .attention import (attn_decode, attn_decode_paged, attn_forward,
                         init_attn_cache, init_attn_params,
                         init_paged_attn_cache)
-from .layers import (apply_mrope, apply_rope, cross_entropy, dense_init,
-                     dtype_of, embed_init, rms_norm, softcap)
+from .layers import (apply_mrope, apply_rope, dense_init, dtype_of,
+                     embed_init, rms_norm, softcap)
 from .mamba import (init_mamba_cache, init_mamba_params, mamba_decode,
                     mamba_forward)
 from .moe import init_moe_params, moe_forward

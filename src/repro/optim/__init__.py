@@ -9,15 +9,15 @@ An optimizer is a pair of functions:
 apply_updates is a plain tree add.  All of them are learner-axis agnostic:
 stacking a leading learner dim on every leaf just works.
 """
-from .base import FusedSGD, Optimizer, apply_updates, scale_by_schedule
-from .sgd import sgd
 from .adam import adam
-from .lamb import lamb
-from .decentlam import decentlam
 from .adascale import AdaScale, AdaScaleAutoLR
+from .base import FusedSGD, Optimizer, apply_updates, scale_by_schedule
+from .decentlam import decentlam
+from .lamb import lamb
 from .schedules import (constant_schedule, controller_scale, linear_warmup,
                         scale_by_controller, set_controller_scale, step_decay,
                         warmup_linear_scale)
+from .sgd import sgd
 
 __all__ = ["FusedSGD", "Optimizer", "apply_updates", "sgd", "adam", "lamb",
            "decentlam", "AdaScale", "AdaScaleAutoLR",

@@ -100,8 +100,12 @@ def served_divergence(api, params_served, params_live, tokens) -> Dict[str, floa
     """
     batch = {"tokens": jnp.asarray(tokens, jnp.int32)}
     v = api.cfg.vocab
-    a = np.asarray(api.apply(params_served, batch)[..., :v], np.float32)
-    b = np.asarray(api.apply(params_live, batch)[..., :v], np.float32)
+    # diagnostic path, not the decode loop: pulling both logit sets to host
+    # for the numpy comparison is the point
+    a = np.asarray(api.apply(params_served, batch)[..., :v],
+                   np.float32)                   # lint: allow-host-sync
+    b = np.asarray(api.apply(params_live, batch)[..., :v],
+                   np.float32)                   # lint: allow-host-sync
     agree = float(np.mean(np.argmax(a, -1) == np.argmax(b, -1)))
     diff = np.abs(a - b)
     return {"top1_agreement": agree,

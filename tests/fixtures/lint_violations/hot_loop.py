@@ -1,0 +1,12 @@
+# lint: hot-path
+"""Seeded no-host-sync violations: three un-annotated syncs and one
+correctly suppressed sync (which must NOT be flagged)."""
+import numpy as np
+
+
+def bad_sync_loop(logits, state):
+    lg = np.asarray(logits)                      # violation: np.asarray
+    s = state.loss.item()                        # violation: .item()
+    logits.block_until_ready()                   # violation: full sync
+    ok = np.asarray(state.clock)                 # lint: allow-host-sync
+    return lg, s, ok

@@ -1,0 +1,10 @@
+"""Seeded no-id-cache violations: the PR 7 serve-cache bug in miniature."""
+
+_CACHE = {}
+
+
+def cached_compile(fn, compile_fn):
+    key = id(fn)
+    if _CACHE.get(id(fn)) is None:               # violation: .get(id(...))
+        _CACHE[key] = compile_fn(fn)
+    return _CACHE[id(fn)]                        # violation: [id(...)]

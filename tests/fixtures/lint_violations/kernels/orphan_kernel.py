@@ -1,0 +1,6 @@
+"""Seeded kernel-oracle violation: no *orphan_kernel*_ref oracle exists in
+ref.py and ops.py never imports this module."""
+
+
+def orphan_kernel_fwd(x):
+    return x * 2

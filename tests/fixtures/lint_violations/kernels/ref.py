@@ -1,0 +1,5 @@
+"""Oracles for this fixture's kernels — deliberately missing one."""
+
+
+def good_kernel_ref(x):
+    return x

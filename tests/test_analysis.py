@@ -1,0 +1,466 @@
+"""Tier-1 tests for the static invariant auditor (DESIGN §16).
+
+Every registered rule gets a positive case (a seeded violation it must
+flag) and a negative case (a clean program it must pass) — the same
+contract ``repro.analysis.run --selftest`` enforces at lint time, pinned
+here at unit granularity so a broken rule fails the suite, not just the
+lint gate.
+"""
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import RULES, Finding, format_findings, load_all_rules
+from repro.analysis.jaxpr_audit import (aliased_param_bytes,
+                                        collective_count, count_primitive,
+                                        donation_honored, max_concat_elems,
+                                        no_host_callback, no_param_concat,
+                                        wire_dtype)
+from repro.analysis.lint import (design_refs, kernel_oracle, lint_root,
+                                 no_host_sync, no_id_cache)
+from repro.analysis.retrace import (RetraceError, RetraceSentinel,
+                                    compile_count, no_retrace)
+from repro.analysis.run import REPO_ROOT, main
+from repro.core.flatstate import max_concat_elems as flatstate_delegate
+
+FIXTURE = REPO_ROOT / "tests" / "fixtures" / "lint_violations"
+
+
+# ---------------------------------------------------------------------------
+# framework
+# ---------------------------------------------------------------------------
+
+def test_rule_catalog_complete():
+    rules = load_all_rules()
+    assert len(rules) >= 8
+    for name in ("no-param-concat", "no-host-callback", "collective-count",
+                 "wire-dtype", "donation-honored", "no-retrace",
+                 "no-host-sync", "no-id-cache", "kernel-oracle",
+                 "design-refs"):
+        assert name in rules, name
+        assert rules[name]            # every rule carries a contract line
+
+
+def test_duplicate_rule_name_raises():
+    from repro.analysis.report import rule
+
+    @rule("dup-test-rule", "contract A")
+    def a():
+        return []
+
+    with pytest.raises(ValueError):
+        @rule("dup-test-rule", "contract B")
+        def b():
+            return []
+    # idempotent re-registration (same contract) is fine: re-imports happen
+    @rule("dup-test-rule", "contract A")
+    def c():
+        return []
+    RULES.pop("dup-test-rule")
+
+
+def test_format_findings():
+    f = Finding("some-rule", "file.py:3", "boom")
+    assert str(f) == "file.py:3: [some-rule] boom"
+    out = format_findings([f, f])
+    assert out.endswith("2 finding(s)")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr traversal + max_concat_elems edge cases
+# ---------------------------------------------------------------------------
+
+def test_max_concat_empty_jaxpr_is_zero():
+    ident = jax.make_jaxpr(lambda x: x)(1.0)
+    assert ident.jaxpr.eqns == []
+    assert max_concat_elems(ident) == 0
+
+
+def test_max_concat_accepts_open_and_closed_jaxpr():
+    closed = jax.make_jaxpr(
+        lambda a, b: jnp.concatenate([a, b]))(jnp.ones(3), jnp.ones(4))
+    assert max_concat_elems(closed) == 7
+    assert max_concat_elems(closed.jaxpr) == 7          # bare Jaxpr too
+    assert flatstate_delegate(closed) == 7              # old import path
+
+
+def test_max_concat_recurses_into_nested_closed_call():
+    j = jax.make_jaxpr(lambda a, b: jax.jit(
+        lambda u, v: jnp.concatenate([u, v]))(a, b))(
+            jnp.ones(600), jnp.ones(600))
+    assert max_concat_elems(j) == 1200
+
+
+def test_max_concat_recurses_into_scan_body():
+    def body(c, x):
+        return c, jnp.concatenate([x, x])
+    j = jax.make_jaxpr(
+        lambda xs: jax.lax.scan(body, 0.0, xs))(jnp.ones((3, 50)))
+    assert max_concat_elems(j) == 100
+
+
+# ---------------------------------------------------------------------------
+# rule: no-param-concat
+# ---------------------------------------------------------------------------
+
+def test_no_param_concat_flags_big_concat():
+    j = jax.make_jaxpr(
+        lambda a, b: jnp.concatenate([a, b]))(jnp.ones(600), jnp.ones(600))
+    fs = no_param_concat(j, bound=1000, target="toy")
+    assert len(fs) == 1 and fs[0].rule == "no-param-concat"
+    assert "1200" in fs[0].message
+
+
+def test_no_param_concat_passes_below_bound():
+    j = jax.make_jaxpr(
+        lambda a, b: jnp.concatenate([a, b]))(jnp.ones(3), jnp.ones(4))
+    assert no_param_concat(j, bound=1000, target="toy") == []
+
+
+# ---------------------------------------------------------------------------
+# rule: no-host-callback
+# ---------------------------------------------------------------------------
+
+def test_no_host_callback_flags_pure_callback():
+    j = jax.make_jaxpr(lambda x: jax.pure_callback(
+        lambda v: v, jax.ShapeDtypeStruct((), jnp.float32), x))(1.0)
+    fs = no_host_callback(j, target="toy")
+    assert fs and fs[0].rule == "no-host-callback"
+    assert "pure_callback" in fs[0].message
+
+
+def test_no_host_callback_passes_pure_math():
+    j = jax.make_jaxpr(lambda x: jnp.sin(x) + 1)(1.0)
+    assert no_host_callback(j, target="toy") == []
+
+
+# ---------------------------------------------------------------------------
+# rules: collective-count + wire-dtype (ppermute via a 1-device pmap)
+# ---------------------------------------------------------------------------
+
+def _ppermute_jaxpr(dtype=jnp.float32):
+    return jax.make_jaxpr(jax.pmap(
+        lambda x: jax.lax.ppermute(x, "i", [(0, 0)]),
+        axis_name="i"))(jnp.ones((1, 4), dtype))
+
+
+def test_collective_count_jaxpr_path():
+    j = _ppermute_jaxpr()
+    assert count_primitive(j, "ppermute") == 1
+    assert collective_count(j, expected=1, target="toy") == []
+    too_few = collective_count(j, expected=2, target="toy")
+    too_many = collective_count(j, expected=0, target="toy")
+    assert too_few and too_many            # both directions are violations
+    assert too_few[0].rule == "collective-count"
+
+
+def test_collective_count_hlo_path():
+    hlo = ("x = collective-permute(a), source_target_pairs={{0,1}}\n"
+           "y = collective-permute-start(b)\n")
+    assert collective_count(None, expected=2, target="t",
+                            hlo_text=hlo) == []
+    fs = collective_count(None, expected=1, target="t", hlo_text=hlo)
+    assert fs and "compiled HLO" in fs[0].message
+
+
+def test_wire_dtype_rule():
+    j = _ppermute_jaxpr(jnp.float32)
+    assert wire_dtype(j, expected=jnp.float32, target="toy") == []
+    fs = wire_dtype(j, expected=jnp.bfloat16, target="toy")
+    assert fs and fs[0].rule == "wire-dtype"
+    assert "float32" in fs[0].message and "bfloat16" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# rule: donation-honored (needs a real compiled executable)
+# ---------------------------------------------------------------------------
+
+def test_donation_honored_positive_and_negative():
+    x = jnp.ones(1000, jnp.float32)
+    donated = jax.jit(lambda v: v + 1, donate_argnums=0).lower(x).compile()
+    assert aliased_param_bytes(donated) >= 4000
+    assert donation_honored(donated, min_bytes=4000, target="toy") == []
+
+    plain = jax.jit(lambda v: v + 1).lower(x).compile()
+    assert aliased_param_bytes(plain) == 0
+    fs = donation_honored(plain, min_bytes=4000, target="toy")
+    assert fs and fs[0].rule == "donation-honored"
+    assert "double-buffered" in fs[0].message
+
+
+def test_aliased_param_bytes_parser_on_synthetic_hlo():
+    hlo = textwrap.dedent("""\
+        HloModule toy, input_output_alias={ {0}: (0, {}, may-alias),
+        {1}: (2, {}, may-alias) },
+        entry_computation_layout={(f32[100,2]{1,0}, s32[7]{0},
+        bf16[8,8]{1,0})->(f32[100,2]{1,0}, bf16[8,8]{1,0})}
+        """)
+    # params 0 (f32[100,2] = 800 B) and 2 (bf16[8,8] = 128 B) are aliased
+
+    class FakeCompiled:
+        def as_text(self):
+            return hlo
+
+    assert aliased_param_bytes(FakeCompiled()) == 800 + 128
+
+
+def test_aliased_param_bytes_no_alias_section():
+    class FakeCompiled:
+        def as_text(self):
+            return "HloModule toy\nENTRY main { ROOT r = f32[] const }"
+
+    assert aliased_param_bytes(FakeCompiled()) == 0
+
+
+# ---------------------------------------------------------------------------
+# rule: no-retrace
+# ---------------------------------------------------------------------------
+
+def test_sentinel_clean_window():
+    f = jax.jit(lambda x: x * 2)
+    f(jnp.ones(3))
+    with RetraceSentinel(f, strict=True) as s:
+        f(jnp.ones(3) + 5)                 # same shape: operand change only
+    assert s.findings == []
+
+
+def test_sentinel_catches_retrace_strict():
+    f = jax.jit(lambda x: x * 2)
+    f(jnp.ones(3))
+    with pytest.raises(RetraceError):
+        with RetraceSentinel(f):
+            f(jnp.ones(4))                 # new shape: a real retrace
+
+
+def test_sentinel_collect_mode_and_labels():
+    f = jax.jit(lambda x: x * 2)
+    f(jnp.ones(3))
+    with RetraceSentinel(f, strict=False, labels=["hot-step"]) as s:
+        f(jnp.ones((2, 2)))
+    assert len(s.findings) == 1
+    assert s.findings[0].rule == "no-retrace"
+    assert s.findings[0].where == "hot-step"
+
+
+def test_sentinel_does_not_mask_exceptions():
+    f = jax.jit(lambda x: x * 2)
+    f(jnp.ones(3))
+    with pytest.raises(RuntimeError, match="real failure"):
+        with RetraceSentinel(f):
+            f(jnp.ones(4))                 # grows the cache, AND ...
+            raise RuntimeError("real failure")
+
+
+def test_sentinel_rejects_unjitted_and_bad_labels():
+    with pytest.raises(TypeError):
+        compile_count(lambda x: x)
+    f = jax.jit(lambda x: x)
+    with pytest.raises(ValueError):
+        RetraceSentinel(f, labels=["a", "b"])
+    with pytest.raises(ValueError):
+        RetraceSentinel()
+
+
+def test_no_retrace_rule_wrapper():
+    f = jax.jit(lambda x: x * 2)
+    f(jnp.ones(3))
+    assert no_retrace(lambda: f(jnp.ones(3)), f) == []
+    fs = no_retrace(lambda: f(jnp.ones(5)), f)
+    assert fs and fs[0].rule == "no-retrace"
+
+
+def test_compile_count_unwraps_serve_jitted():
+    def raw(x):
+        return x + 1
+    raw._serve_jitted = jax.jit(raw)
+    raw._serve_jitted(jnp.ones(2))
+    assert compile_count(raw) == 1
+
+
+# ---------------------------------------------------------------------------
+# rule: no-host-sync (AST)
+# ---------------------------------------------------------------------------
+
+HOT_BAD = textwrap.dedent("""\
+    import numpy as np
+    def step(state, logits):
+        a = np.asarray(logits)
+        b = state.loss.item()
+        logits.block_until_ready()
+        return a, b
+    """)
+
+HOT_SUPPRESSED = textwrap.dedent("""\
+    import numpy as np
+    def step(state):
+        return np.asarray(state.clock)   # lint: allow-host-sync
+    """)
+
+HOT_CLEAN = textwrap.dedent("""\
+    import jax.numpy as jnp
+    def step(x):
+        y = jnp.asarray(x)               # jnp.asarray never syncs
+        return x.item(0)                 # .item(i) is numpy indexing
+    """)
+
+
+def test_no_host_sync_flags_all_three_forms():
+    fs = no_host_sync(Path("hot.py"), HOT_BAD)
+    assert len(fs) == 3
+    assert {f.rule for f in fs} == {"no-host-sync"}
+    msgs = " ".join(f.message for f in fs)
+    assert "asarray" in msgs and "item" in msgs and "block_until_ready" in msgs
+
+
+def test_no_host_sync_honors_suppression():
+    assert no_host_sync(Path("hot.py"), HOT_SUPPRESSED) == []
+
+
+def test_no_host_sync_ignores_jnp_and_indexed_item():
+    assert no_host_sync(Path("hot.py"), HOT_CLEAN) == []
+
+
+def test_no_host_sync_multiline_statement_suppression():
+    src = ("import numpy as np\n"
+           "def f(x):\n"
+           "    return np.asarray(\n"
+           "        x)   # lint: allow-host-sync\n")
+    assert no_host_sync(Path("hot.py"), src) == []
+
+
+# ---------------------------------------------------------------------------
+# rule: no-id-cache (AST)
+# ---------------------------------------------------------------------------
+
+def test_no_id_cache_flags_subscript_and_get():
+    src = ("_C = {}\n"
+           "def jitted(fn):\n"
+           "    if _C.get(id(fn)) is None:\n"
+           "        _C[id(fn)] = fn\n"
+           "    return _C[id(fn)]\n")
+    fs = no_id_cache(Path("c.py"), src)
+    assert len(fs) == 3
+    assert {f.rule for f in fs} == {"no-id-cache"}
+
+
+def test_no_id_cache_passes_attribute_keyed_cache():
+    src = ("def jitted(fn):\n"
+           "    if getattr(fn, '_j', None) is None:\n"
+           "        fn._j = fn\n"
+           "    return fn._j\n")
+    assert no_id_cache(Path("c.py"), src) == []
+
+
+# ---------------------------------------------------------------------------
+# rule: kernel-oracle (AST)
+# ---------------------------------------------------------------------------
+
+def _make_kernels(tmp_path, ref_src, ops_src, modules):
+    d = tmp_path / "kernels"
+    d.mkdir()
+    (d / "ref.py").write_text(ref_src)
+    (d / "ops.py").write_text(ops_src)
+    for m in modules:
+        (d / f"{m}.py").write_text("def impl(x):\n    return x\n")
+    return d
+
+
+def test_kernel_oracle_clean_tree(tmp_path):
+    d = _make_kernels(tmp_path,
+                      "def foo_ref(x):\n    return x\n",
+                      "from .foo import impl\n", ["foo"])
+    assert kernel_oracle(d) == []
+
+
+def test_kernel_oracle_flags_orphan(tmp_path):
+    d = _make_kernels(tmp_path,
+                      "def foo_ref(x):\n    return x\n",
+                      "from .foo import impl\n", ["foo", "orphan"])
+    fs = kernel_oracle(d)
+    assert len(fs) == 2                     # no oracle AND no dispatch
+    assert all("orphan" in f.message for f in fs)
+
+
+def test_kernel_oracle_flags_missing_ref_py(tmp_path):
+    d = tmp_path / "kernels"
+    d.mkdir()
+    (d / "ops.py").write_text("")
+    fs = kernel_oracle(d)
+    assert any("ref.py" in f.message for f in fs)
+
+
+# ---------------------------------------------------------------------------
+# rule: design-refs (AST)
+# ---------------------------------------------------------------------------
+
+def test_design_refs_resolution(tmp_path):
+    (tmp_path / "DESIGN.md").write_text("## §1 A section\nbody\n")
+    good = tmp_path / "good.py"
+    good.write_text("# see DESIGN §1 for the contract\n")
+    bad = tmp_path / "bad.py"
+    bad.write_text("# see DESIGN.md §9 for nothing\n")
+    assert design_refs(tmp_path, files=[good]) == []
+    fs = design_refs(tmp_path, files=[bad])
+    assert len(fs) == 1 and "§9" in fs[0].message
+
+
+def test_design_refs_no_design_md(tmp_path):
+    f = tmp_path / "x.py"
+    f.write_text("# DESIGN §2\n")
+    fs = design_refs(tmp_path, files=[f])
+    assert len(fs) == 1                     # nothing can resolve
+
+
+# ---------------------------------------------------------------------------
+# the seeded fixture tree + tree scanning
+# ---------------------------------------------------------------------------
+
+def test_fixture_tree_fires_every_ast_rule():
+    fs = lint_root(FIXTURE)
+    fired = {f.rule for f in fs}
+    assert fired == {"no-host-sync", "no-id-cache", "kernel-oracle",
+                     "design-refs"}
+    # the suppressed np.asarray in hot_loop.py must NOT be among them
+    sup = [f for f in fs if "clock" in f.message]
+    assert sup == []
+
+
+def test_fixture_dir_is_skipped_in_parent_scans(tmp_path):
+    sub = tmp_path / "fixtures" / "bad"
+    sub.mkdir(parents=True)
+    (sub / "v.py").write_text("_C = {}\ndef f(x):\n    return _C[id(x)]\n")
+    assert lint_root(tmp_path) == []        # skipped as part of a tree
+    assert lint_root(sub) != []             # scanned when it IS the root
+
+
+def test_repo_tree_is_clean():
+    """The repo's own AST pass: zero un-suppressed findings (the lint
+    gate's first stage, pinned as a test so a violation fails tier-1 with
+    a readable message rather than only in CI)."""
+    fs = lint_root(REPO_ROOT)
+    assert fs == [], format_findings(fs)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_fixture_root_exits_nonzero(capsys):
+    rc = main(["--root", str(FIXTURE)])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "finding(s)" in out
+
+
+def test_cli_ast_only_clean(capsys):
+    assert main(["--ast-only"]) == 0
+    assert "AST pass clean" in capsys.readouterr().out
+
+
+def test_cli_selftest(capsys):
+    assert main(["--selftest"]) == 0
+    out = capsys.readouterr().out
+    assert "rules bite" in out

@@ -3,10 +3,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.ref import flash_attention_ref
 from repro.models.attention import (attn_decode, attn_forward,
                                     chunked_attention, init_attn_cache,
                                     init_attn_params)
-from repro.kernels.ref import flash_attention_ref
 
 
 def _qkv(key, B=2, S=64, H=4, KV=2, hd=16):

@@ -13,7 +13,7 @@ import os
 import pytest
 
 from benchmarks import check_regression, schema, trajectory
-from benchmarks.matrix import SPEC, MatrixSpec, REGISTRY, expand
+from benchmarks.matrix import REGISTRY, SPEC, MatrixSpec, expand
 
 HISTORY_PR3 = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "benchmarks", "history", "BENCH_PR3.json")

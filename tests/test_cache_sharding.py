@@ -12,8 +12,6 @@ def mesh():
     devs = jax.devices()
     if len(devs) < 1:
         pytest.skip("no devices")
-    import numpy as np
-    from jax.sharding import Mesh
     # fake 16x16 by reusing the same device — fine for spec construction only
     class FakeMesh:
         axis_names = ("data", "model")

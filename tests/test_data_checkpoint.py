@@ -1,12 +1,12 @@
+import tempfile
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import tempfile
 
-from repro.data import (GaussianMixtureImages, ShardedLoader,
-                        SyntheticTokenStream, ZipfianTokenStream,
-                        TeacherStudentRegression)
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data import (GaussianMixtureImages, ShardedLoader,
+                        SyntheticTokenStream, ZipfianTokenStream)
 
 
 def test_loader_determinism_and_distinct_learners():

@@ -2,8 +2,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.diagnostics import compute_diagnostics
 from repro.core import AlgoConfig, MultiLearnerTrainer
+from repro.core.diagnostics import compute_diagnostics
 from repro.optim import sgd
 
 

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 from repro.core import dpsgd, topology as topo
-from repro.core.util import learner_mean, learner_var, tree_sub, tree_norm_sq
+from repro.core.util import learner_mean, learner_var, tree_norm_sq, tree_sub
 
 
 def _tree(key, n):

@@ -16,12 +16,12 @@ import numpy as np
 import pytest
 
 from repro.core import AlgoConfig, MultiLearnerTrainer
-from repro.core.flatstate import LANE, FlatMeta, flat_meta, max_concat_elems
+from repro.core.flatstate import LANE, flat_meta, max_concat_elems
 from repro.data import ShardedLoader, TemplateImages
 from repro.models import fcnet
-from repro.optim import (controller_scale, scale_by_controller,
-                         scale_by_schedule, set_controller_scale, sgd,
-                         constant_schedule)
+from repro.optim import (constant_schedule, controller_scale,
+                         scale_by_controller, scale_by_schedule,
+                         set_controller_scale, sgd)
 
 N = 5
 DS = TemplateImages()

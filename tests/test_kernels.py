@@ -7,8 +7,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import paged_decode_attention_fwd
 from repro.kernels.flash_attention import flash_attention_fwd
-from repro.kernels.gossip_mix import (flatten_for_kernel, gossip_mix_update,
-                                      gossip_mix_update_flat)
+from repro.kernels.gossip_mix import flatten_for_kernel, gossip_mix_update
 from repro.kernels.ops import (dpsgd_fused_update, flash_attention,
                                flat_gossip_update, paged_decode_attention)
 

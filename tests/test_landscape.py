@@ -17,11 +17,11 @@ import pytest
 
 from repro.core import AlgoConfig, MultiLearnerTrainer
 from repro.kernels import ref, reorth_pass, reorthogonalize
-from repro.landscape import (AutoLRController, ProbeSchedule, hutchinson_trace,
-                             lanczos_pytree, make_probe_fn, make_trainer_probe,
-                             predict_alpha_e, probe_landscape, sharpness,
-                             trace_hc)
-from repro.optim import (apply_updates, controller_scale, scale_by_controller,
+from repro.landscape import (AutoLRController, ProbeSchedule,
+                             hutchinson_trace, lanczos_pytree,
+                             make_trainer_probe, predict_alpha_e,
+                             probe_landscape, sharpness, trace_hc)
+from repro.optim import (controller_scale, scale_by_controller,
                          set_controller_scale, sgd)
 
 # ---------------------------------------------------------------------------

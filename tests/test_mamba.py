@@ -2,8 +2,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.mamba import (init_mamba_cache, init_mamba_params,
-                                mamba_decode, mamba_forward, _ssm_scan_chunked)
+from repro.models.mamba import (_ssm_scan_chunked, init_mamba_cache,
+                                init_mamba_params, mamba_decode,
+                                mamba_forward)
 
 
 def test_chunked_scan_matches_sequential():

@@ -1,4 +1,4 @@
-from repro.launch.roofline import (Roofline, parse_collectives, _shape_bytes)
+from repro.launch.roofline import Roofline, _shape_bytes, parse_collectives
 
 HLO = """
 HloModule test

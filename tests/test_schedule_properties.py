@@ -25,7 +25,6 @@ import itertools
 import math
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,6 +1,5 @@
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.sharding import leaf_spec

@@ -5,7 +5,6 @@ large-lr large-batch SSGD oscillates/diverges while DPSGD converges
 NOT reproduce the separation (documented in EXPERIMENTS.md §Fig2)."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core import AlgoConfig, MultiLearnerTrainer
 from repro.data import ShardedLoader, TemplateImages
